@@ -1,0 +1,38 @@
+"""Fig. 5: Adaptive Polling MAX_RETRY sweep.
+
+Small MAX_RETRY → event-like (many wakeups, low CPU); large → busy-like
+(few wakeups, more empty polls/CPU). Bandwidth saturates while CPU keeps
+climbing — the paper's "meaningless CPU burning" point.
+"""
+
+from __future__ import annotations
+
+from repro.core import PollConfig, PollMode
+
+from .common import csv_row, make_box, run_workload
+
+RETRIES = (1, 8, 32, 120, 512)
+
+
+def main() -> list:
+    out = []
+    for mr in RETRIES:
+        box = make_box(peers=(1,), channels=1, window=2 << 20, scale=2e-7,
+                       poll=PollConfig(mode=PollMode.ADAPTIVE, batch=16,
+                                       max_retry=mr))
+        try:
+            res = run_workload(box, threads=2, ops_per_thread=384,
+                               pattern="seq")
+            p = res.stats["poll"]
+            out.append(csv_row(
+                f"adaptive_sweep/max_retry{mr}", 1e3 / max(res.kops_per_s, 1e-9),
+                f"kops={res.kops_per_s:.1f};cpu_s={p['cpu_seconds']:.3f};"
+                f"wakeups={p['wakeups']};empty_polls={p['empty_polls']}"))
+        finally:
+            box.close()
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -1,0 +1,56 @@
+"""Fig. 6 + Table 1 + Fig. 7: batching policy comparison.
+
+Single I/O (preMR/dynMR) vs Doorbell vs Batching-on-MR vs Hybrid under a
+write-heavy multi-threaded sequential workload (the VoltDB-SYS-like
+swap-out pattern). Reports throughput, total RDMA ops / MMIOs (Table 1),
+and p99 latency (Fig. 7).
+"""
+
+from __future__ import annotations
+
+from repro.core import BatchPolicy, RegMode
+
+from .common import csv_row, make_box, run_workload
+
+CASES = [
+    ("single_preMR", BatchPolicy.SINGLE, RegMode.PRE_MR),
+    ("single_dynMR", BatchPolicy.SINGLE, RegMode.DYN_MR),
+    ("batchMR_dynMR", BatchPolicy.BATCH_ON_MR, RegMode.DYN_MR),
+    ("doorbell_dynMR", BatchPolicy.DOORBELL, RegMode.DYN_MR),
+    ("hybrid_dynMR", BatchPolicy.HYBRID, RegMode.DYN_MR),
+]
+
+
+def run(threads: int = 6, ops: int = 384):
+    rows = []
+    table1 = {}
+    for name, policy, reg in CASES:
+        box = make_box(policy=policy, reg=reg, window=1 << 20, scale=2e-5)
+        try:
+            res = run_workload(box, threads=threads, ops_per_thread=ops,
+                               pattern="seq")
+            nic = res.stats["nic"]
+            table1[name] = dict(rdma_ops=nic["rdma_ops"],
+                                mmio=nic["mmio_writes"],
+                                dma_reads=nic["dma_reads"])
+            rows.append((name, res.kops_per_s, res.pct(99),
+                         nic["rdma_ops"], nic["mmio_writes"]))
+        finally:
+            box.close()
+    return rows, table1
+
+
+def main() -> list:
+    rows, table1 = run()
+    base = next(r for r in rows if r[0] == "single_dynMR")
+    out = []
+    for name, kops, p99, ops_n, mmio in rows:
+        derived = (f"kops={kops:.1f};p99_us={p99:.1f};rdma_ops={ops_n};"
+                   f"mmio={mmio};speedup_vs_single={kops/base[1]:.2f}x")
+        out.append(csv_row(f"batching/{name}", 1e3 / max(kops, 1e-9), derived))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

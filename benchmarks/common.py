@@ -1,0 +1,115 @@
+"""Shared benchmark harness: cluster fixture + workload generators.
+
+Timing model: the simulated NIC paces virtual microseconds against the
+real clock (BoxConfig.nic_scale seconds per vus), so completed-ops/s are
+comparable across configurations; event counts (WQEs, MMIOs, cache
+misses, wakeups) are exact.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (BatchPolicy, BoxConfig, NICCostModel, PollConfig,
+                        PollMode, RDMABox, RegionDirectory, RegMode,
+                        RemoteRegion, PAGE_SIZE)
+
+DATA = np.arange(PAGE_SIZE, dtype=np.uint8)
+
+
+def make_box(peers: Sequence[int] = (1, 2, 3), *,
+             policy: BatchPolicy = BatchPolicy.HYBRID,
+             reg: RegMode = RegMode.AUTO,
+             poll: Optional[PollConfig] = None,
+             window: Optional[int] = 8 << 20,
+             channels: int = 4,
+             kernel_space: bool = True,
+             scale: float = 2e-7,
+             donor_pages: int = 1 << 15,
+             app_handler_cost: int = 0,
+             cost: Optional[NICCostModel] = None) -> RDMABox:
+    directory = RegionDirectory()
+    for n in peers:
+        directory.register(RemoteRegion(n, donor_pages))
+    handler = None
+    if app_handler_cost:
+        def handler(wc, _n=app_handler_cost):
+            x = 0
+            for i in range(_n):      # run-to-completion CPU work (holds GIL)
+                x += i * i
+    cfg = BoxConfig(batch_policy=policy, reg_mode=reg,
+                    poll=poll or PollConfig(),
+                    window_bytes=window, channels_per_peer=channels,
+                    kernel_space=kernel_space, nic_scale=scale,
+                    nic_cost=cost or NICCostModel(),
+                    app_handler=handler)
+    return RDMABox(0, directory, list(peers), config=cfg)
+
+
+@dataclass
+class WorkloadResult:
+    ops: int
+    wall_s: float
+    latencies_us: np.ndarray       # virtual completion latencies
+    stats: Dict
+
+    @property
+    def kops_per_s(self) -> float:
+        return self.ops / self.wall_s / 1e3
+
+    def pct(self, q: float) -> float:
+        return float(np.percentile(self.latencies_us, q)) if len(
+            self.latencies_us) else 0.0
+
+
+def run_workload(box: RDMABox, *, threads: int = 4, ops_per_thread: int = 256,
+                 pattern: str = "seq", read_frac: float = 0.0,
+                 burst: int = 8, seed: int = 0) -> WorkloadResult:
+    """Each thread issues page writes/reads; ``seq`` gives each thread its
+    own ascending page range (mergeable — the swap-out pattern), ``rand``
+    scatters uniformly (unmergeable)."""
+    rng = np.random.default_rng(seed)
+    peers = box.peers
+    donor_pages = box.directory.lookup(peers[0]).num_pages
+    futs_all: List = []
+    lock = threading.Lock()
+
+    def worker(tid: int):
+        r = np.random.default_rng((seed, tid))
+        futs = []
+        for i in range(ops_per_thread):
+            peer = peers[(tid + i // burst) % len(peers)]
+            if pattern == "seq":
+                page = (tid * ops_per_thread + i) % donor_pages
+            else:
+                page = int(r.integers(0, donor_pages))
+            if r.random() < read_frac:
+                out = np.empty(PAGE_SIZE, np.uint8)
+                futs.append(box.read(peer, page, 1, out=out))
+            else:
+                futs.append(box.write(peer, page, DATA))
+        with lock:
+            futs_all.extend(futs)
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    lat = []
+    for f in futs_all:
+        wc = f.wait(60)
+        lat.append(wc.latency_us)
+    wall = time.perf_counter() - t0
+    return WorkloadResult(ops=len(futs_all), wall_s=wall,
+                          latencies_us=np.asarray(lat), stats=box.stats())
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

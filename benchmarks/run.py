@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+  PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "benchmarks.bench_registration",     # Fig. 4
+    "benchmarks.bench_batching",         # Fig. 6 + Table 1 + Fig. 7
+    "benchmarks.bench_admission",        # Fig. 1 + Fig. 8
+    "benchmarks.bench_adaptive_sweep",   # Fig. 5
+    "benchmarks.bench_polling",          # Fig. 9 + Fig. 10
+    "benchmarks.bench_channels",         # Fig. 11
+    "benchmarks.bench_paging",           # Figs. 12/13
+    "benchmarks.bench_serving",          # Fig. 14
+    "benchmarks.bench_paged_attention",  # TPU kernel embodiment
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            for line in mod.main():
+                print(line, flush=True)
+            print(f"# {modname} done in {time.perf_counter()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {modname} FAILED: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

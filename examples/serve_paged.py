@@ -1,0 +1,14 @@
+"""Serving example: batched prefill + decode with the paged KV tier.
+
+  PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    defaults = ["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "4",
+                "--prompt-len", "64", "--gen", "24", "--spill"]
+    sys.argv = [sys.argv[0]] + defaults + sys.argv[1:]
+    main()

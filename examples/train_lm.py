@@ -1,0 +1,21 @@
+"""End-to-end driver: train the ~100M-param model for a few hundred steps.
+
+Thin wrapper over the production launcher (repro.launch.train) with the
+paper-era defaults: AdamW + ZeRO-sharded moments, async checkpointing with
+resume, RDMAbox offload of optimizer moments. ~100M params is the full
+(non-reduced) rdmabox-paper-100m config; pass --reduced for a quick CPU
+smoke run.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --reduced --steps 50
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    defaults = ["--arch", "rdmabox-paper-100m", "--batch", "8",
+                "--seq", "512", "--ckpt-every", "100", "--offload"]
+    sys.argv = [sys.argv[0]] + defaults + sys.argv[1:]
+    main()

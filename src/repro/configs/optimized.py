@@ -1,0 +1,41 @@
+"""Beyond-paper optimized configs (§Perf).
+
+``optimize(cfg)`` flips the perf knobs justified by the hillclimb log in
+EXPERIMENTS.md §Perf; the paper-faithful baseline keeps the defaults.
+Individual knobs can be applied via ``optimize(cfg, only={...})`` for the
+one-change-at-a-time iteration record.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Set
+
+from .base import ModelConfig, replace
+
+KNOBS = ("flash_bf16", "blocks", "swa", "moe", "ssd_chunk", "ssd_chunk128",
+         "mla_lat")
+
+# knobs the §Perf iteration CONFIRMED (flash_bf16 and ssd_chunk* were
+# refuted — see EXPERIMENTS.md §Perf — and are excluded from the default)
+DEFAULT_ON = {"blocks", "swa", "moe", "mla_lat"}
+
+
+def optimize(cfg: ModelConfig, only: Optional[Set[str]] = None) -> ModelConfig:
+    on = set(DEFAULT_ON) if only is None else set(only)
+    kw = {}
+    if "flash_bf16" in on:
+        kw["flash_bf16"] = True
+    if "blocks" in on:
+        kw["attn_q_block"] = 1024
+        kw["attn_kv_block"] = 1024
+    if "swa" in on and cfg.window is not None:
+        kw["swa_sliced_kv"] = True
+    if "moe" in on and cfg.num_experts:
+        kw["moe_shard_map"] = True
+    if "ssd_chunk" in on and cfg.uses_ssm:
+        kw["ssm_chunk"] = 64
+    if "ssd_chunk128" in on and cfg.uses_ssm:
+        kw["ssm_chunk"] = 128
+    if "mla_lat" in on and cfg.attention == "mla":
+        kw["mla_latent_psum"] = True
+    return replace(cfg, **kw)

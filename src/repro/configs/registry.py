@@ -1,0 +1,40 @@
+"""--arch registry: id → (full config, reduced smoke config)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from .base import ModelConfig
+
+ARCH_IDS = [
+    "mamba2-780m",
+    "command-r-35b",
+    "qwen1.5-32b",
+    "qwen2.5-32b",
+    "qwen1.5-0.5b",
+    "hymba-1.5b",
+    "deepseek-v2-lite-16b",
+    "qwen2-moe-a2.7b",
+    "musicgen-large",
+    "llava-next-34b",
+    "rdmabox-paper-100m",   # the paper-era end-to-end driver model
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

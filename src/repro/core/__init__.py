@@ -1,0 +1,33 @@
+"""repro.core — RDMAbox's contribution: load-aware batching, admission
+control, adaptive polling, and the node-level remote-memory abstraction."""
+
+from .admission import AdmissionController, AdmissionHook
+from .batching import BatchPolicy, plan, resolve_reg_mode
+from .channel import Channel, ChannelSet
+from .completion import CompletionQueue
+from .descriptors import (
+    PAGE_SIZE,
+    RegMode,
+    TransferDescriptor,
+    Verb,
+    WCStatus,
+    WorkCompletion,
+    WorkRequest,
+    contiguous_runs,
+)
+from .merge_queue import MergeQueue
+from .nic import NICCostModel, SimulatedNIC
+from .paging import DiskTier, RemotePagingSystem
+from .polling import Poller, PollConfig, PollMode
+from .rdmabox import BoxConfig, RDMABox, TransferFuture
+from .region import RegionDirectory, RemoteRegion
+
+__all__ = [
+    "AdmissionController", "AdmissionHook", "BatchPolicy", "plan",
+    "resolve_reg_mode", "Channel", "ChannelSet", "CompletionQueue",
+    "PAGE_SIZE", "RegMode", "TransferDescriptor", "Verb", "WCStatus",
+    "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",
+    "NICCostModel", "SimulatedNIC", "DiskTier", "RemotePagingSystem",
+    "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
+    "TransferFuture", "RegionDirectory", "RemoteRegion",
+]

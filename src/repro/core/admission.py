@@ -1,0 +1,90 @@
+"""RDMA-I/O-level admission control (§5.1).
+
+A window-based in-flight-bytes limiter implemented *on* the merge queue —
+no extra queueing layer. While the window is full, posting threads block;
+their requests keep sitting in the merge queue, where waiting is productive
+(more neighbours arrive ⇒ bigger merges). ``AdmissionHook`` is the paper's
+extension point for plugging real congestion-control policies.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from .descriptors import AtomicCounter
+
+
+class AdmissionHook:
+    """Custom policy hook; default is the static window of the prototype."""
+
+    def window_bytes(self, current_window: int) -> int:
+        return current_window
+
+
+class AdmissionController:
+    def __init__(self, window_bytes: Optional[int],
+                 hook: Optional[AdmissionHook] = None) -> None:
+        """``window_bytes=None`` disables admission control entirely."""
+        self.window_bytes = window_bytes
+        self.hook = hook or AdmissionHook()
+        self._in_flight = 0
+        self._cv = threading.Condition()
+        self.blocked_count = AtomicCounter()
+
+    @property
+    def in_flight_bytes(self) -> int:
+        with self._cv:
+            return self._in_flight
+
+    def try_acquire(self, nbytes: int) -> bool:
+        """Non-blocking reserve; used by the merge path to decide to wait."""
+        if self.window_bytes is None:
+            return True
+        with self._cv:
+            limit = self.hook.window_bytes(self.window_bytes)
+            if self._in_flight + nbytes <= limit or self._in_flight == 0:
+                self._in_flight += nbytes
+                return True
+            return False
+
+    def acquire(self, nbytes: int, timeout: Optional[float] = None) -> bool:
+        """Blocking reserve (a zero-in-flight poster always proceeds)."""
+        if self.window_bytes is None:
+            return True
+        deadline = None
+        with self._cv:
+            limit = self.hook.window_bytes(self.window_bytes)
+            blocked = False
+            while self._in_flight + nbytes > limit and self._in_flight > 0:
+                if not blocked:
+                    self.blocked_count.add()
+                    blocked = True
+                if not self._cv.wait(timeout=timeout):
+                    return False
+                limit = self.hook.window_bytes(self.window_bytes)
+            self._in_flight += nbytes
+            return True
+
+    def wait_for_space(self, timeout: Optional[float] = None) -> bool:
+        """Block until the window has *any* room (merger gate)."""
+        if self.window_bytes is None:
+            return True
+        with self._cv:
+            limit = self.hook.window_bytes(self.window_bytes)
+            blocked = False
+            while self._in_flight >= limit:
+                if not blocked:
+                    self.blocked_count.add()
+                    blocked = True
+                if not self._cv.wait(timeout=timeout):
+                    return False
+                limit = self.hook.window_bytes(self.window_bytes)
+            return True
+
+    def release(self, nbytes: int) -> None:
+        if self.window_bytes is None:
+            return
+        with self._cv:
+            self._in_flight = max(0, self._in_flight - nbytes)
+            self._cv.notify_all()

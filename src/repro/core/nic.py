@@ -1,0 +1,308 @@
+"""Simulated RDMA NIC with the bottlenecks the paper measures.
+
+The cost model captures, in virtual microseconds, the effects RDMAbox
+optimizes (§4.1):
+
+* **MMIO vs DMA-read** — posting an unchained WQE costs one MMIO; a
+  doorbell chain pays one MMIO for the head and a cheaper DMA-read per
+  chained WQE (Kalia et al. 2016).
+* **Per-WQE NIC processing** — every WQE costs fixed PU time regardless of
+  size; merging N adjacent requests into one WQE (batching-on-MR) removes
+  N-1 of these, which doorbell batching alone cannot.
+* **WQE-cache thrashing** — while outstanding WQEs exceed the on-NIC cache,
+  each additional WQE pays a refetch penalty. This is the I/O-thrashing
+  collapse of Fig. 1 and what the admission-control window prevents.
+* **Shared wire** — payload bytes serialize on one link; PU fixed costs
+  parallelize across ``num_pus`` (multi-QP engages multiple PUs, Fig. 11 —
+  gains are sublinear because the wire is shared).
+* **preMR/dynMR** — poster-side memcpy vs registration cost with the
+  user/kernel asymmetry of Fig. 4.
+
+Timing: virtual time is paced against the real clock (1 vus = ``scale``
+real seconds) with debt-based sleeping, so thread-level CPU contention
+(e.g. busy polling burning the GIL) degrades throughput the same way NIC
+verbs processing degrades under host CPU pressure. Event counts (MMIOs,
+WQEs, cache misses, completions) are exact and deterministic.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .completion import CompletionQueue
+from .descriptors import (
+    AtomicCounter,
+    PAGE_SIZE,
+    RegMode,
+    TransferDescriptor,
+    Verb,
+    WCStatus,
+    WorkCompletion,
+)
+from .region import RegionDirectory
+
+
+@dataclass
+class NICCostModel:
+    """Virtual-microsecond costs. Defaults loosely follow ConnectX-3 FDR."""
+
+    mmio_us: float = 0.30           # CPU MMIO write of one WQE (64B BlueFlame)
+    dma_read_us: float = 0.10       # NIC DMA-read of one chained WQE
+    wqe_proc_us: float = 0.20       # fixed NIC PU processing per WQE
+    cache_miss_us: float = 0.80     # WQE refetch when the WQE cache thrashes
+    wire_us_per_page: float = 0.585  # 4 KiB / ~7 GB/s (56 Gb/s FDR)
+    completion_dma_us: float = 0.10  # CQE write back to host
+    # poster-side memory-region costs (Fig. 4)
+    memcpy_us_per_page: float = 0.41     # copy into preMR (~10 GB/s)
+    reg_user_base_us: float = 11.35      # dynMR setup, user space (virtual addr)
+    reg_user_per_page_us: float = 0.36   # per-page PTE/translation cost
+    reg_kernel_us: float = 0.12          # dynMR, kernel space (physical addr)
+    wqe_cache_entries: int = 128
+    num_pus: int = 4
+
+    def reg_cost_us(self, num_pages: int, kernel_space: bool) -> float:
+        if kernel_space:
+            return self.reg_kernel_us
+        return self.reg_user_base_us + num_pages * self.reg_user_per_page_us
+
+    def memcpy_cost_us(self, num_pages: int) -> float:
+        return num_pages * self.memcpy_us_per_page
+
+    def crossover_pages(self) -> int:
+        """User-space size above which dynMR beats preMR (paper: ~928 KB)."""
+        per_page_gain = self.memcpy_us_per_page - self.reg_user_per_page_us
+        if per_page_gain <= 0:
+            return 1 << 30
+        return int(self.reg_user_base_us / per_page_gain) + 1
+
+
+class Pacer:
+    """Busy-period virtual clock paced against real time.
+
+    ``charge(v_us)`` advances the busy period by ``v_us`` virtual
+    microseconds starting no earlier than *now* (idle time is not banked as
+    burst credit) and sleeps whenever the virtual clock runs ahead of real
+    time by more than the sleep granularity.
+    """
+
+    def __init__(self, scale: float, origin: float,
+                 min_sleep_real: float = 4e-4):
+        self.scale = scale
+        self.origin = origin
+        self.min_sleep_real = min_sleep_real   # REAL seconds granularity
+        self._vtime_us = 0.0  # absolute virtual timestamp of busy-period end
+        self._lock = threading.Lock()
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self.origin) / self.scale
+
+    def charge(self, v_us: float) -> float:
+        """Advance the busy period; returns the virtual completion stamp."""
+        with self._lock:
+            start = max(self._vtime_us, self.now_us())
+            self._vtime_us = start + v_us
+            end = self._vtime_us
+        ahead_real = (end - self.now_us()) * self.scale
+        if ahead_real > self.min_sleep_real:
+            time.sleep(ahead_real)
+        return end
+
+
+@dataclass
+class NICStats:
+    mmio_writes: AtomicCounter = field(default_factory=AtomicCounter)
+    dma_reads: AtomicCounter = field(default_factory=AtomicCounter)
+    wqes_posted: AtomicCounter = field(default_factory=AtomicCounter)
+    rdma_ops: AtomicCounter = field(default_factory=AtomicCounter)   # == WQEs
+    cache_misses: AtomicCounter = field(default_factory=AtomicCounter)
+    completions: AtomicCounter = field(default_factory=AtomicCounter)
+    bytes_on_wire: AtomicCounter = field(default_factory=AtomicCounter)
+    memcpy_pages: AtomicCounter = field(default_factory=AtomicCounter)
+    registrations: AtomicCounter = field(default_factory=AtomicCounter)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {
+            "mmio_writes": self.mmio_writes.value,
+            "dma_reads": self.dma_reads.value,
+            "wqes_posted": self.wqes_posted.value,
+            "rdma_ops": self.rdma_ops.value,
+            "cache_misses": self.cache_misses.value,
+            "completions": self.completions.value,
+            "bytes_on_wire": self.bytes_on_wire.value,
+            "memcpy_pages": self.memcpy_pages.value,
+            "registrations": self.registrations.value,
+        }
+
+
+class QueuePair:
+    """Send queue bound to one destination node and one CQ."""
+
+    _counter = 0
+
+    def __init__(self, nic: "SimulatedNIC", dest_node: int, cq: CompletionQueue):
+        QueuePair._counter += 1
+        self.qp_id = QueuePair._counter
+        self.nic = nic
+        self.dest_node = dest_node
+        self.cq = cq
+        self.pu_index = self.qp_id % nic.cost.num_pus
+
+
+class SimulatedNIC:
+    """One node's NIC: PU worker threads + shared wire + WQE cache model."""
+
+    def __init__(
+        self,
+        node_id: int,
+        directory: RegionDirectory,
+        cost: Optional[NICCostModel] = None,
+        scale: float = 1e-6,
+        kernel_space: bool = True,
+    ) -> None:
+        self.node_id = node_id
+        self.directory = directory
+        self.cost = cost or NICCostModel()
+        self.scale = scale
+        self.kernel_space = kernel_space
+        self.stats = NICStats()
+        origin = time.perf_counter()
+        self._origin = origin
+        self._wire = Pacer(scale, origin)
+        self._pu_pacers = [Pacer(scale, origin) for _ in range(self.cost.num_pus)]
+        self._poster_pacer = Pacer(scale, origin)
+        self._pu_queues: List[List] = [[] for _ in range(self.cost.num_pus)]
+        self._pu_cv = [threading.Condition() for _ in range(self.cost.num_pus)]
+        self._outstanding = AtomicCounter()
+        self._running = True
+        self._threads = [
+            threading.Thread(target=self._pu_loop, args=(i,), daemon=True,
+                             name=f"nic{node_id}-pu{i}")
+            for i in range(self.cost.num_pus)
+        ]
+        for t in self._threads:
+            t.start()
+
+    # ---- host-facing API -------------------------------------------------
+    def create_qp(self, dest_node: int, cq: CompletionQueue) -> QueuePair:
+        return QueuePair(self, dest_node, cq)
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._origin) / self.scale
+
+    @property
+    def outstanding(self) -> int:
+        return self._outstanding.value
+
+    def post(self, qp: QueuePair, descs: List[TransferDescriptor],
+             doorbell: bool = False) -> None:
+        """Post descriptors; ``doorbell=True`` chains them (1 MMIO total)."""
+        if not descs:
+            return
+        poster_us = 0.0
+        for i, d in enumerate(descs):
+            # poster-side MR cost (Fig. 4 path)
+            if d.reg_mode == RegMode.PRE_MR:
+                poster_us += self.cost.memcpy_cost_us(d.num_pages)
+                self.stats.memcpy_pages.add(d.num_pages)
+            else:
+                poster_us += self.cost.reg_cost_us(d.num_pages, self.kernel_space)
+                self.stats.registrations.add(1)
+            if doorbell and i > 0:
+                d.chained = True
+                self.stats.dma_reads.add(1)
+            else:
+                poster_us += self.cost.mmio_us
+                self.stats.mmio_writes.add(1)
+            self.stats.wqes_posted.add(1)
+            self.stats.rdma_ops.add(1)
+        self._poster_pacer.charge(poster_us)
+        post_v = self.now_us()
+        post_r = time.perf_counter()
+        self._outstanding.add(len(descs))
+        pu = qp.pu_index
+        with self._pu_cv[pu]:
+            for d in descs:
+                self._pu_queues[pu].append((qp, d, post_v, post_r))
+            self._pu_cv[pu].notify()
+
+    def close(self) -> None:
+        self._running = False
+        for cv in self._pu_cv:
+            with cv:
+                cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    # ---- NIC processing units --------------------------------------------
+    def _pu_loop(self, pu: int) -> None:
+        cv = self._pu_cv[pu]
+        queue = self._pu_queues[pu]
+        pacer = self._pu_pacers[pu]
+        while True:
+            with cv:
+                while self._running and not queue:
+                    cv.wait(timeout=0.1)
+                if not self._running and not queue:
+                    return
+                qp, desc, post_v, post_r = queue.pop(0)
+            self._process(pu, pacer, qp, desc, post_v, post_r)
+
+    def _process(self, pu: int, pacer: Pacer, qp: QueuePair,
+                 desc: TransferDescriptor, post_v: float, post_r: float) -> None:
+        cost = self.cost
+        fixed_us = cost.wqe_proc_us
+        wire_us = desc.num_pages * cost.wire_us_per_page
+        if desc.chained:
+            fixed_us += cost.dma_read_us
+        # WQE-cache thrash: outstanding beyond cache ⇒ the descriptor is
+        # refetched from host memory — a DMA read that consumes the SHARED
+        # PCIe/link bandwidth, not just PU time (this is why thrashing
+        # collapses throughput even when compute is idle, Fig. 1).
+        if self._outstanding.value > cost.wqe_cache_entries:
+            wire_us += cost.cache_miss_us
+            self.stats.cache_misses.add(1)
+        pacer.charge(fixed_us)
+        # Payload (+ refetches) serialize on the shared wire.
+        complete_v = self._wire.charge(wire_us)
+        self.stats.bytes_on_wire.add(desc.nbytes)
+        status = WCStatus.SUCCESS
+        try:
+            self._move_data(desc)
+        except Exception:   # remote access fault → error completion, never
+            status = WCStatus.REMOTE_ERR        # a silently-dead PU thread
+        pacer.charge(cost.completion_dma_us)
+        self._outstanding.add(-1)  # one WQE retired
+        wc = WorkCompletion(
+            wr_id=desc.requests[0].wr_id if desc.requests else -1,
+            verb=desc.verb,
+            dest_node=desc.dest_node,
+            nbytes=desc.nbytes,
+            status=status,
+            post_vtime_us=post_v,
+            complete_vtime_us=complete_v,
+            post_rtime=post_r,
+            complete_rtime=time.perf_counter(),
+            requests=desc.requests,
+        )
+        self.stats.completions.add(1)
+        qp.cq.post(wc)
+
+    def _move_data(self, desc: TransferDescriptor) -> None:
+        """Actually move the bytes (numpy), page-granular."""
+        region = self.directory.lookup(desc.dest_node)
+        if desc.verb == Verb.WRITE:
+            addr = desc.remote_addr
+            for req in desc.requests:
+                if req.payload is not None:
+                    region.write(req.remote_addr, req.payload)
+                addr += req.num_pages
+        else:  # READ
+            for req in desc.requests:
+                data = region.read(req.remote_addr, req.num_pages)
+                if req.payload is not None:
+                    req.payload[...] = data.reshape(req.payload.shape)
+                else:
+                    req.payload = data

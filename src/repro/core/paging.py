@@ -1,0 +1,138 @@
+"""Remote paging system (§6, §7.1) — the paper's kernel-space showcase.
+
+Page-granular swap to remote memory with replication over ``r`` donor
+nodes and disk fallback ("disk access occurs only when all replication is
+failed"). Page placement is striped so that *consecutive local pages map to
+contiguous remote pages on the same donor* — that is precisely the locality
+load-aware batching exploits: a burst of sequential swap-outs merges into a
+handful of large WQEs.
+
+Replica layout: donor count n, stripe S, replication r. Page p belongs to
+group g = p // S; replica k lives on donor (g + k) % n at offset
+``k * (donor_pages // r) + (g // n) * S + (p % S)`` — per-replica regions
+are disjoint, so replicas never collide.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .descriptors import PAGE_SIZE
+from .rdmabox import RDMABox, TransferFuture
+
+
+class DiskTier:
+    """Slow backing store of last resort (dict + simulated latency)."""
+
+    def __init__(self, latency_us: float = 100.0) -> None:
+        self.latency_us = latency_us
+        self._store: Dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()
+        self.reads = 0
+        self.writes = 0
+
+    def write(self, page_id: int, data: np.ndarray) -> None:
+        with self._lock:
+            self._store[page_id] = np.array(data, dtype=np.uint8).reshape(-1).copy()
+            self.writes += 1
+
+    def read(self, page_id: int) -> Optional[np.ndarray]:
+        time.sleep(self.latency_us * 1e-6)
+        with self._lock:
+            self.reads += 1
+            data = self._store.get(page_id)
+            return None if data is None else data.copy()
+
+
+class RemotePagingSystem:
+    def __init__(
+        self,
+        box: RDMABox,
+        donor_pages: int,
+        replication: int = 2,
+        stripe_pages: int = 16,
+        disk: Optional[DiskTier] = None,
+        write_through_disk: bool = False,
+    ) -> None:
+        self.box = box
+        self.donors = list(box.peers)
+        self.n = len(self.donors)
+        self.r = min(replication, self.n)
+        self.stripe = stripe_pages
+        self.donor_pages = donor_pages
+        self.replica_region = donor_pages // max(1, self.r)
+        self.disk = disk or DiskTier()
+        self.write_through_disk = write_through_disk
+        self._failed: set[int] = set()
+        self._lock = threading.Lock()
+        self.capacity_pages = (self.replica_region // self.stripe) * self.n * self.stripe
+
+    # ---- placement ---------------------------------------------------------
+    def replicas(self, page_id: int) -> List[Tuple[int, int]]:
+        """[(donor_node, remote_page)] for each replica of ``page_id``."""
+        if page_id >= self.capacity_pages:
+            raise ValueError(f"page {page_id} beyond capacity {self.capacity_pages}")
+        g, off = divmod(page_id, self.stripe)
+        out = []
+        for k in range(self.r):
+            donor = self.donors[(g + k) % self.n]
+            remote = k * self.replica_region + (g // self.n) * self.stripe + off
+            out.append((donor, remote))
+        return out
+
+    # ---- fault injection -----------------------------------------------------
+    def fail_node(self, node: int) -> None:
+        with self._lock:
+            self._failed.add(node)
+
+    def recover_node(self, node: int) -> None:
+        with self._lock:
+            self._failed.discard(node)
+
+    def _live(self, node: int) -> bool:
+        with self._lock:
+            return node not in self._failed
+
+    # ---- swap API ---------------------------------------------------------------
+    def swap_out(self, page_id: int, data: np.ndarray,
+                 wait: bool = False) -> List[TransferFuture]:
+        """Write one page to all live replicas (async by default)."""
+        buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
+        assert buf.nbytes == PAGE_SIZE, "swap_out takes exactly one page"
+        futs = []
+        for donor, remote in self.replicas(page_id):
+            if self._live(donor):
+                futs.append(self.box.write(donor, remote, buf))
+        if self.write_through_disk or not futs:
+            self.disk.write(page_id, buf)
+        if wait:
+            for f in futs:
+                f.wait()
+        return futs
+
+    def swap_in(self, page_id: int, timeout: float = 10.0) -> np.ndarray:
+        """Read a page back: first live replica wins, disk as last resort."""
+        out = np.empty(PAGE_SIZE, dtype=np.uint8)
+        for donor, remote in self.replicas(page_id):
+            if not self._live(donor):
+                continue
+            try:
+                self.box.read(donor, remote, 1, out=out).wait(timeout=timeout)
+                return out
+            except (RuntimeError, TimeoutError):
+                continue
+        data = self.disk.read(page_id)
+        if data is None:
+            raise KeyError(f"page {page_id} lost: all replicas failed, not on disk")
+        return data
+
+    def prefetch(self, page_id: int, out: np.ndarray) -> TransferFuture:
+        """Async read from the first live replica (straggler-tolerant path)."""
+        for donor, remote in self.replicas(page_id):
+            if self._live(donor):
+                return self.box.read(donor, remote, 1, out=out)
+        raise RuntimeError("no live replicas to prefetch from")

@@ -1,0 +1,59 @@
+"""Remote memory regions — page-granular byte arrays donated by peer nodes.
+
+This is the "remote MR" the simulated fabric reads/writes. Data movement is
+real (numpy copies), so paging/offload correctness is end-to-end testable.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict
+
+import numpy as np
+
+from .descriptors import PAGE_SIZE
+
+
+class RemoteRegion:
+    """One donor node's registered memory region."""
+
+    def __init__(self, node_id: int, num_pages: int) -> None:
+        self.node_id = node_id
+        self.num_pages = num_pages
+        self._mem = np.zeros((num_pages, PAGE_SIZE), dtype=np.uint8)
+        self._lock = threading.Lock()
+
+    def write(self, page: int, data: np.ndarray) -> None:
+        n = data.size // PAGE_SIZE
+        if page < 0 or page + n > self.num_pages:
+            raise IndexError(f"remote write [{page},{page+n}) outside "
+                             f"region of {self.num_pages} pages")
+        with self._lock:
+            self._mem[page : page + n] = data.reshape(n, PAGE_SIZE)
+
+    def read(self, page: int, num_pages: int) -> np.ndarray:
+        if page < 0 or page + num_pages > self.num_pages:
+            raise IndexError(f"remote read [{page},{page+num_pages}) outside "
+                             f"region of {self.num_pages} pages")
+        with self._lock:
+            return self._mem[page : page + num_pages].copy()
+
+    @property
+    def nbytes(self) -> int:
+        return self.num_pages * PAGE_SIZE
+
+
+class RegionDirectory:
+    """Cluster-wide directory of donated regions (exchange of rkeys/addrs)."""
+
+    def __init__(self) -> None:
+        self._regions: Dict[int, RemoteRegion] = {}
+
+    def register(self, region: RemoteRegion) -> None:
+        self._regions[region.node_id] = region
+
+    def lookup(self, node_id: int) -> RemoteRegion:
+        return self._regions[node_id]
+
+    def nodes(self):
+        return sorted(self._regions)

@@ -1,0 +1,59 @@
+"""Memory-region strategies: preMR staging pool vs dynMR (§5.1, Fig. 4).
+
+The *decision* (cost crossover) lives in the NIC cost model and
+``batching.resolve_reg_mode``; this module provides the preMR staging-buffer
+pool itself plus the measured cost curves used by the Fig. 4 benchmark.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .descriptors import PAGE_SIZE
+from .nic import NICCostModel
+
+
+class StagingPool:
+    """Pre-allocated, pre-registered MR buffers (the preMR path).
+
+    Fixed-size page-granular slabs; acquiring copies the payload in (the
+    memcpy the paper prices), releasing returns the slab.
+    """
+
+    def __init__(self, slab_pages: int = 64, num_slabs: int = 32) -> None:
+        self.slab_pages = slab_pages
+        self._free: List[np.ndarray] = [
+            np.zeros(slab_pages * PAGE_SIZE, dtype=np.uint8)
+            for _ in range(num_slabs)
+        ]
+        self._cv = threading.Condition()
+
+    def acquire(self, payload: np.ndarray) -> np.ndarray:
+        assert payload.nbytes <= self.slab_pages * PAGE_SIZE, "payload exceeds slab"
+        with self._cv:
+            while not self._free:
+                self._cv.wait()
+            slab = self._free.pop()
+        view = slab[: payload.nbytes]
+        view[...] = payload.reshape(-1).view(np.uint8)
+        return slab
+
+    def release(self, slab: np.ndarray) -> None:
+        with self._cv:
+            self._free.append(slab)
+            self._cv.notify()
+
+
+def cost_curves(cost: NICCostModel, sizes_kb: List[int]
+                ) -> Dict[str, List[Tuple[int, float, float]]]:
+    """(size_kb, preMR_us, dynMR_us) per space — the Fig. 4 data."""
+    out: Dict[str, List[Tuple[int, float, float]]] = {"kernel": [], "user": []}
+    for kb in sizes_kb:
+        pages = max(1, (kb * 1024) // PAGE_SIZE)
+        pre = cost.memcpy_cost_us(pages)
+        out["kernel"].append((kb, pre, cost.reg_cost_us(pages, True)))
+        out["user"].append((kb, pre, cost.reg_cost_us(pages, False)))
+    return out

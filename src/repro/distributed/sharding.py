@@ -1,0 +1,120 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Every param/activation leaf carries a tuple of logical axis names
+(recorded at init by ``repro.models.layers.param``); this module maps them
+to ``NamedSharding``s for a concrete mesh. Rules are overridable per arch
+(``ModelConfig.sharding_overrides``) — e.g. qwen2-moe shards expert FFN
+columns because 60 experts don't divide the model axis.
+
+Divisibility fallback: a mesh axis that does not divide the corresponding
+dim is dropped for that leaf (replicated on that axis) rather than failing —
+the pragmatic Megatron/MaxText behaviour for awkward head counts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, AxisRule] = {
+    # weights
+    "vocab": "model",
+    "embed": None,
+    "q_flat": "model",
+    "kv_flat": "model",
+    "ffn": "model",
+    "experts": "model",
+    "moe_ff": None,
+    "ssm_inner": "model",
+    "lora": None,
+    "layers": None,
+    # activations / caches
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "kv_lora": "model",      # MLA latent cache feature dim
+    "ssm_heads": "model",    # SSM decode state heads (divisibility fallback)
+    # optimizer state re-maps "embed" → "data" (ZeRO-1); see optim_rules()
+}
+
+
+def rules_for(cfg: Optional[ModelConfig] = None,
+              extra: Optional[Dict[str, AxisRule]] = None) -> Dict[str, AxisRule]:
+    rules = dict(DEFAULT_RULES)
+    if cfg is not None:
+        rules.update(dict(cfg.sharding_overrides))
+    if extra:
+        rules.update(extra)
+    return rules
+
+
+def optim_rules(cfg: Optional[ModelConfig] = None) -> Dict[str, AxisRule]:
+    """ZeRO-1 style: optimizer moments additionally shard the (normally
+    replicated) "embed" axis across the data axis."""
+    r = rules_for(cfg)
+    r["embed"] = "data"
+    return r
+
+
+def _axis_size(mesh: Mesh, rule: AxisRule) -> int:
+    if rule is None:
+        return 1
+    names = (rule,) if isinstance(rule, str) else rule
+    return math.prod(mesh.shape[n] for n in names if n in mesh.shape)
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             mesh: Mesh, rules: Dict[str, AxisRule]) -> P:
+    """PartitionSpec for one leaf, with divisibility fallback."""
+    assert len(shape) == len(logical), f"{shape} vs {logical}"
+    used: set = set()
+    entries = []
+    for dim, name in zip(shape, logical):
+        rule = rules.get(name) if name is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        names = (rule,) if isinstance(rule, str) else tuple(rule)
+        names = tuple(n for n in names if n in mesh.shape and n not in used)
+        size = math.prod(mesh.shape[n] for n in names) if names else 1
+        if not names or size <= 1 or dim % size != 0:
+            entries.append(None)
+            continue
+        used.update(names)
+        entries.append(names if len(names) > 1 else names[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(tree: Any, spec_tree: Any, mesh: Mesh,
+                   rules: Dict[str, AxisRule]) -> Any:
+    """Map a pytree (arrays or ShapeDtypeStructs) + parallel logical-axes
+    tree to NamedShardings."""
+
+    leaves, treedef = jax.tree.flatten(tree)
+    spec_leaves = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, tuple))[0]
+    assert len(leaves) == len(spec_leaves), (
+        f"param/spec tree mismatch: {len(leaves)} vs {len(spec_leaves)}")
+    out = [NamedSharding(mesh, spec_for(l.shape, s, mesh, rules))
+           for l, s in zip(leaves, spec_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def batch_spec(mesh: Mesh, batch: Optional[int] = None) -> P:
+    """Batch sharding over (pod, data), dropping axes that don't divide."""
+    names = tuple(n for n in ("pod", "data") if n in mesh.shape)
+    if batch is not None:
+        while names and batch % math.prod(mesh.shape[n] for n in names):
+            names = names[1:] if len(names) > 1 else ()
+    if not names:
+        return P()
+    return P(names if len(names) > 1 else names[0])

@@ -1,0 +1,36 @@
+"""Oracle for the flash attention kernel: plain masked softmax attention.
+
+q: (B, Sq, H, D); k, v: (B, Skv, Kh, D). Causal + optional sliding window.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    B, Sq, H, D = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * D ** -0.5
+    qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)   # align ends (decode tail)
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    out = jnp.einsum("bhqt,bthd->bqhd", jax.nn.softmax(s, axis=-1),
+                     vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,138 @@
+"""Pallas TPU paged decode attention with run-coalesced DMA.
+
+The RDMAbox idea inside the chip: the host-side planner (ops.plan_blocks)
+is the merge queue — it turns each sequence's page list into maximal
+contiguous runs and chops them into fixed-size blocks of R pages. The
+kernel issues ONE async copy per block (R pages in a single DMA) instead
+of one per page — batching-on-MR at the HBM→VMEM tier. When the allocator
+preserved contiguity, every block carries R valid pages (full descriptor
+reduction); a fragmented cache degrades gracefully to valid=1 blocks
+(single-page copies), which is exactly load-aware batching's
+no-forced-merging behaviour.
+
+Completion handling is the kernel analogue of Adaptive Polling: the DMA
+semaphore is waited on only when the next block's buffer is needed
+(event-triggered), and the double buffer drains bursts without stalls.
+
+Layouts:
+  q:          (B, H, D)
+  kv_pages:   (P, T, 2, Kh, D)   (k and v interleaved on axis 2)
+  block_start:(B, NB)  s32       first page id of each R-page block
+  block_valid:(B, NB)  s32       valid pages in the block (0 = skip)
+  lengths:    (B,)     s32       tokens in the sequence
+  out:        (B, H, D)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_start, block_valid, lengths,      # scalar prefetch (SMEM)
+            q_ref, kv_hbm, o_ref,                   # tensor refs
+            kv_buf, sem,                             # scratch: double buffer
+            *, pages_per_block: int, num_blocks: int, page_tokens: int):
+    b = pl.program_id(0)
+    R, T = pages_per_block, page_tokens
+    H, D = q_ref.shape[1], q_ref.shape[2]
+    Kh = kv_buf.shape[4]   # (slot, R, T, 2, Kh, D)
+    G = H // Kh
+    q = q_ref[0].astype(jnp.float32)                # (H, D)
+    qh = q.reshape(Kh, G, D)
+    seq_len = lengths[b]
+
+    def dma(i, slot):
+        start = block_start[b, i]
+        return pltpu.make_async_copy(
+            kv_hbm.at[pl.ds(start, R)], kv_buf.at[slot], sem.at[slot])
+
+    # warm-up: kick off block 0 into slot 0
+    @pl.when(block_valid[b, 0] > 0)
+    def _():
+        dma(0, 0).start()
+
+    def block_step(i, carry):
+        m, l, acc, cnt = carry
+        slot = jax.lax.rem(i, 2)
+        nvalid = block_valid[b, i]
+
+        # adaptive-polling analogue: prefetch block i+1 into the other
+        # buffer before waiting on block i (overlap compute with DMA)
+        @pl.when(jnp.logical_and(i + 1 < num_blocks,
+                                 block_valid[b, i + 1] > 0))
+        def _():
+            dma(i + 1, 1 - slot).start()
+
+        @pl.when(nvalid > 0)
+        def _():
+            dma(i, slot).wait()
+
+        kv = kv_buf[slot].astype(jnp.float32)       # (R, T, 2, Kh, D)
+        k = kv[:, :, 0].reshape(R * T, Kh, D)
+        v = kv[:, :, 1].reshape(R * T, Kh, D)
+        tok = jax.lax.broadcasted_iota(jnp.int32, (R * T,), 0)
+        base = cnt * T                    # cumulative token offset: blocks
+        valid = (tok < nvalid * T) & (base + tok < seq_len)  # may be < R pages
+
+        s = jnp.einsum("kgd,tkd->kgt", qh, k,
+                       preferred_element_type=jnp.float32) * (D ** -0.5)
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "kgt,tkd->kgd", p, v, preferred_element_type=jnp.float32)
+        # blocks with nvalid == 0 contribute nothing (s = -inf everywhere
+        # would corrupt m); guard by selecting the old carry
+        keep = nvalid > 0
+        return (jnp.where(keep, m_new, m), jnp.where(keep, l_new, l),
+                jnp.where(keep, acc_new, acc), cnt + nvalid)
+
+    m0 = jnp.full((Kh, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((Kh, G), jnp.float32)
+    a0 = jnp.zeros((Kh, G, D), jnp.float32)
+    m, l, acc, _ = jax.lax.fori_loop(0, num_blocks, block_step,
+                                     (m0, l0, a0, jnp.int32(0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    o_ref[0] = out.reshape(H, D).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, kv_pages: jax.Array,
+                           block_start: jax.Array, block_valid: jax.Array,
+                           lengths: jax.Array, *, pages_per_block: int,
+                           interpret: bool = True) -> jax.Array:
+    B, H, D = q.shape
+    P, T, two, Kh, _ = kv_pages.shape
+    assert two == 2
+    NB = block_start.shape[1]
+    R = pages_per_block
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, *_: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),        # kv pool stays in HBM
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, *_: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, R, T, 2, Kh, D), kv_pages.dtype),  # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    kernel = functools.partial(_kernel, pages_per_block=R, num_blocks=NB,
+                               page_tokens=T)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(block_start, block_valid, lengths, q, kv_pages)

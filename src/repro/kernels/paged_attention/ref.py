@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for paged decode attention.
+
+q:          (B, H, D)           one query token per sequence
+kv_pages:   (P, T, 2, Kh, D)    pooled pages: T tokens each, k & v
+page_table: (B, Pmax)           page ids per sequence (−1 = unused)
+lengths:    (B,)                tokens so far (cache length per sequence)
+
+Returns (B, H, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, kv_pages: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    B, H, D = q.shape
+    P, T, _, Kh, _ = kv_pages.shape
+    Pmax = page_table.shape[1]
+    G = H // Kh
+
+    # gather each sequence's pages: (B, Pmax, T, 2, Kh, D)
+    safe_table = jnp.maximum(page_table, 0)
+    gathered = kv_pages[safe_table]
+    k = gathered[:, :, :, 0].reshape(B, Pmax * T, Kh, D)
+    v = gathered[:, :, :, 1].reshape(B, Pmax * T, Kh, D)
+
+    pos = jnp.arange(Pmax * T)[None, :]
+    valid = (pos < lengths[:, None]) & (
+        jnp.repeat(page_table >= 0, T, axis=1))
+
+    qh = q.reshape(B, Kh, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32)) * D ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

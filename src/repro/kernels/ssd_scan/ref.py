@@ -1,0 +1,34 @@
+"""Oracle for the SSD chunk-scan kernel: naive sequential recurrence.
+
+x: (B, L, H, P); Bm/Cm: (B, L, N) (n_groups=1, broadcast over heads);
+dt: (B, L, H); A: (H,) negative. Returns y: (B, L, H, P).
+
+h_t = exp(dt·A)·h_{t-1} + dt·(B_t ⊗ x_t);  y_t = C_t · h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, Bm: jax.Array, Cm: jax.Array, dt: jax.Array,
+            A: jax.Array) -> jax.Array:
+    Bb, L, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, bt, ct, dtt = inp                       # (B,H,P),(B,N),(B,N),(B,H)
+        decay = jnp.exp(dtt * A)                    # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)   # (B,L,H,P)

@@ -1,0 +1,164 @@
+"""jit-compiled step builders: train / prefill / decode, with shardings.
+
+``build_step(cfg, shape, run, mesh)`` returns (jitted_fn, example_args)
+where every example arg is a ShapeDtypeStruct — the dry-run lowers and
+compiles without allocating anything.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..distributed.sharding import (batch_spec, optim_rules, rules_for,
+                                    tree_shardings)
+from ..models import transformer as tf
+from ..optim import adamw
+
+PyTree = Any
+
+
+def _to_struct(leaf, sharding):
+    return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sharding)
+
+
+def param_structs(cfg: ModelConfig, seed: int = 0):
+    """(ShapeDtypeStruct params, logical spec tree) without allocation.
+
+    The spec tree is static python data; capture it as a tracing side
+    effect so nothing is ever materialized.
+    """
+    box: Dict = {}
+
+    def f(k):
+        p, s = tf.init_stack(k, cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(seed))
+    return shapes, box["specs"]
+
+
+def data_structs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict:
+    """ShapeDtypeStructs (with shardings) for the step's data inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    bshard = NamedSharding(mesh, batch_spec(mesh, B))
+
+    def sds(shp, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=bshard)
+
+    if shape.kind == "train":
+        tok = (sds((B, S, cfg.d_model), jnp.bfloat16) if cfg.frontend
+               else sds((B, S)))
+        return {"tokens": tok, "targets": sds((B, S))}
+    if shape.kind == "prefill":
+        tok = (sds((B, S, cfg.d_model), jnp.bfloat16) if cfg.frontend
+               else sds((B, S)))
+        return {"tokens": tok}
+    # decode: one new token against a seq_len cache
+    tok = (sds((B, cfg.d_model), jnp.bfloat16) if cfg.frontend else sds((B,)))
+    return {"token": tok, "cur_index": sds((B,))}
+
+
+def build_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh):
+    params_shape, spec_tree = param_structs(cfg)
+    p_shard = tree_shardings(params_shape, spec_tree, mesh, rules_for(cfg))
+    m_shard = tree_shardings(params_shape, spec_tree, mesh, optim_rules(cfg))
+    o_shard = adamw.OptState(
+        step=NamedSharding(mesh, P()), m=m_shard, v=m_shard,
+        err=(m_shard if run.grad_compression else None))
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return tf.loss_fn(p, batch["tokens"], batch["targets"], cfg,
+                              remat=run.remat)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = adamw.update(grads, opt_state, params, run)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    bshard = NamedSharding(mesh, batch_spec(mesh))
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_shard, o_shard,
+                      {"tokens": bshard, "targets": bshard}),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+    )
+
+    opt_shape = jax.eval_shape(functools.partial(adamw.init, run=run),
+                               params_shape)
+    p_structs = jax.tree.map(_to_struct, params_shape, p_shard)
+    o_structs = adamw.OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P())),
+        m=jax.tree.map(_to_struct, opt_shape.m, m_shard),
+        v=jax.tree.map(_to_struct, opt_shape.v, m_shard),
+        err=(jax.tree.map(_to_struct, opt_shape.err, m_shard)
+             if run.grad_compression else None))
+    return jitted, (p_structs, o_structs), (p_shard, o_shard)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                       mesh: Mesh):
+    params_shape, spec_tree = param_structs(cfg)
+    p_shard = tree_shardings(params_shape, spec_tree, mesh, rules_for(cfg))
+    data = data_structs(cfg, shape, mesh)
+
+    def prefill_step(params, batch):
+        return tf.prefill(params, batch["tokens"], cfg, remat=run.remat)
+
+    cache_shape = jax.eval_shape(
+        lambda p, b: tf.prefill(p, b["tokens"], cfg)[1], params_shape, data)
+    cache_shard = tree_shardings(cache_shape, tf.cache_specs(cfg), mesh,
+                                 rules_for(cfg))
+    bshard = NamedSharding(mesh, batch_spec(mesh, shape.global_batch))
+    jitted = jax.jit(prefill_step,
+                     in_shardings=(p_shard, {"tokens": bshard}),
+                     out_shardings=(None, cache_shard))
+    p_structs = jax.tree.map(_to_struct, params_shape, p_shard)
+    return jitted, (p_structs,), (p_shard,)
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    params_shape, spec_tree = param_structs(cfg)
+    p_shard = tree_shardings(params_shape, spec_tree, mesh, rules_for(cfg))
+    cache_shape = jax.eval_shape(
+        lambda: tf.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_shard = tree_shardings(cache_shape, tf.cache_specs(cfg), mesh,
+                                 rules_for(cfg))
+    cache_sds = jax.tree.map(_to_struct, cache_shape, cache_shard)
+
+    def serve_step(params, cache, token, cur_index):
+        return tf.decode_step(params, cache, token, cur_index, cfg)
+
+    bshard = NamedSharding(mesh, batch_spec(mesh, shape.global_batch))
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, cache_shard, bshard, bshard),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(1,),
+    )
+    p_structs = jax.tree.map(_to_struct, params_shape, p_shard)
+    return jitted, (p_structs, cache_sds), (p_shard, cache_shard)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+               mesh: Mesh) -> Tuple[Any, Tuple]:
+    """Returns (jitted step, example arg structs in call order)."""
+    data = data_structs(cfg, shape, mesh)
+    if shape.kind == "train":
+        jitted, state, _ = build_train_step(cfg, run, mesh)
+        args = state + (data,)
+    elif shape.kind == "prefill":
+        jitted, state, _ = build_prefill_step(cfg, shape, run, mesh)
+        args = state + ({"tokens": data["tokens"]},)
+    else:
+        jitted, state, _ = build_decode_step(cfg, shape, mesh)
+        args = state + (data["token"], data["cur_index"])
+    return jitted, args

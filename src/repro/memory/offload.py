@@ -1,0 +1,92 @@
+"""Tensor offload manager: optimizer state / activations → remote memory.
+
+The training-side consumer of the RDMAbox engine. Tensors are flattened to
+page-granular buffers, swapped out through the remote paging system
+(replicated, admission-window-paced, merge-coalesced), and prefetched back
+ahead of use. A slow donor delays only its own window slots (straggler
+mitigation by backpressure + first-responder replica reads).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.descriptors import PAGE_SIZE
+from ..core.paging import RemotePagingSystem
+
+PyTree = Any
+
+
+class OffloadManager:
+    def __init__(self, paging: RemotePagingSystem) -> None:
+        self.paging = paging
+        self._meta: Dict[str, Dict] = {}
+        self._next_page = 0
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, List] = {}
+
+    def _pages_for(self, nbytes: int) -> int:
+        return -(-nbytes // PAGE_SIZE)
+
+    # ---- swap out ----------------------------------------------------------
+    def offload(self, name: str, array: np.ndarray, wait: bool = False) -> None:
+        """Write a tensor to remote memory (page-granular, replicated)."""
+        arr = np.ascontiguousarray(array)
+        raw = arr.view(np.uint8).reshape(-1)
+        n_pages = self._pages_for(raw.nbytes)
+        with self._lock:
+            meta = self._meta.get(name)
+            if meta is None or meta["n_pages"] < n_pages:
+                meta = {"base": self._next_page, "n_pages": n_pages,
+                        "shape": arr.shape, "dtype": arr.dtype,
+                        "nbytes": raw.nbytes}
+                self._next_page += n_pages
+                self._meta[name] = meta
+            else:
+                meta.update(shape=arr.shape, dtype=arr.dtype, nbytes=raw.nbytes)
+        pad = n_pages * PAGE_SIZE - raw.nbytes
+        if pad:
+            raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+        futs = []
+        for i in range(n_pages):
+            futs.extend(self.paging.swap_out(
+                meta["base"] + i, raw[i * PAGE_SIZE:(i + 1) * PAGE_SIZE]))
+        if wait:
+            for f in futs:
+                f.wait()
+        else:
+            self._inflight[name] = futs
+
+    def flush(self) -> None:
+        for futs in self._inflight.values():
+            for f in futs:
+                f.wait()
+        self._inflight.clear()
+
+    # ---- swap in ----------------------------------------------------------
+    def fetch(self, name: str) -> np.ndarray:
+        meta = self._meta[name]
+        buf = np.empty(meta["n_pages"] * PAGE_SIZE, np.uint8)
+        for i in range(meta["n_pages"]):
+            buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE] = self.paging.swap_in(
+                meta["base"] + i)
+        raw = buf[: meta["nbytes"]]
+        return raw.view(meta["dtype"]).reshape(meta["shape"]).copy()
+
+    # ---- pytree convenience --------------------------------------------------
+    def offload_tree(self, prefix: str, tree: PyTree, wait: bool = True) -> None:
+        import jax
+        leaves, _ = jax.tree.flatten(tree)
+        for i, leaf in enumerate(leaves):
+            self.offload(f"{prefix}/{i}", np.asarray(leaf), wait=False)
+        if wait:
+            self.flush()
+
+    def fetch_tree(self, prefix: str, like: PyTree) -> PyTree:
+        import jax
+        leaves, treedef = jax.tree.flatten(like)
+        out = [self.fetch(f"{prefix}/{i}") for i in range(len(leaves))]
+        return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,36 @@
+"""Cluster fixture: donor nodes' memory regions + an RDMABox per client.
+
+Mirrors the paper's deployment (§7.1): one client node running the
+workload, N remote peers donating DRAM, replication across donors.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..core import (BoxConfig, RDMABox, RegionDirectory, RemotePagingSystem,
+                    RemoteRegion)
+
+
+class MemoryCluster:
+    def __init__(self, num_donors: int = 3, donor_pages: int = 16384,
+                 box_config: Optional[BoxConfig] = None,
+                 replication: int = 2, client_node: int = 0) -> None:
+        self.directory = RegionDirectory()
+        self.donors: List[int] = list(range(1, num_donors + 1))
+        self.donor_pages = donor_pages
+        for node in self.donors:
+            self.directory.register(RemoteRegion(node, donor_pages))
+        self.box = RDMABox(client_node, self.directory, self.donors,
+                           config=box_config)
+        self.paging = RemotePagingSystem(self.box, donor_pages,
+                                         replication=replication)
+
+    def close(self) -> None:
+        self.box.close()
+
+    def __enter__(self) -> "MemoryCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,281 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+The training path is a pure-jnp online-softmax implementation (nested scan
+over query/key blocks) so the full S×S score matrix is never materialized —
+required for prefill_32k to fit HBM. The Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU drop-in with the same oracle.
+
+Perf knobs (ModelConfig, §Perf iterations; defaults = baseline):
+  attn_q_block / attn_kv_block — tile sizes (bigger ⇒ fewer carry
+      read/writes of the (m, l, acc) online-softmax state);
+  flash_bf16 — keep q/k/v operands bf16 and accumulate in f32 via
+      preferred_element_type (halves score-path operand bytes);
+  swa_sliced_kv — sliding-window attention reads a fixed
+      (window + q_block) KV slice per q block instead of masking the full
+      sequence (compute & bytes ∝ window, not S).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import SpecTree, apply_rope, param
+
+NEG_INF = -1e30
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, specs: SpecTree) -> Dict:
+    sub = specs.sub("attn")
+    ks = jax.random.split(key, 8)
+    H, Kh, D, M = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    p = {
+        "wq": param(ks[0], (M, H * D), ("embed", "q_flat"), sub, "wq"),
+        "wk": param(ks[1], (M, Kh * D), ("embed", "kv_flat"), sub, "wk"),
+        "wv": param(ks[2], (M, Kh * D), ("embed", "kv_flat"), sub, "wv"),
+        "wo": param(ks[3], (H * D, M), ("q_flat", "embed"), sub, "wo"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(ks[4], (H * D,), ("q_flat",), sub, "bq", scale=0.0)
+        p["bk"] = param(ks[5], (Kh * D,), ("kv_flat",), sub, "bk", scale=0.0)
+        p["bv"] = param(ks[6], (Kh * D,), ("kv_flat",), sub, "bv", scale=0.0)
+    return p
+
+
+def qkv_proj(p: Dict, x: jax.Array, cfg: ModelConfig,
+             positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, Kh, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsm,mh->bsh", x, p["wq"])
+    k = jnp.einsum("bsm,mh->bsh", x, p["wk"])
+    v = jnp.einsum("bsm,mh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, S, Kh, D)
+    v = v.reshape(B, S, Kh, D)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def flash_attention_jnp(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, window: Optional[int] = None,
+    q_block: int = 512, kv_block: int = 512,
+    q_offset: int = 0, bf16_compute: bool = False,
+    swa_sliced_kv: bool = False,
+) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Kh, D) with H a multiple of Kh.
+    Never materializes more than (q_block × kv_block) scores per (B, head).
+    ``q_offset`` positions q tokens at ``q_offset + i`` against kv.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    scale = D ** -0.5
+    op_dtype = q.dtype if bf16_compute else jnp.float32
+
+    if window is not None and swa_sliced_kv and Skv > window + q_block:
+        return _flash_swa_sliced(q, k, v, window=window, q_block=q_block,
+                                 q_offset=q_offset, bf16_compute=bf16_compute)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    # pad to block multiples
+    Sq_p = -(-Sq // q_block) * q_block
+    Skv_p = -(-Skv // kv_block) * kv_block
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+
+    nq, nkv = Sq_p // q_block, Skv_p // kv_block
+    # (nq, B, qb, Kh, G, D)
+    qb = qp.reshape(B, nq, q_block, Kh, G, D).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nkv, kv_block, Kh, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nkv, kv_block, Kh, D).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(q_block)
+    kv_pos_base = jnp.arange(kv_block)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk                     # index scalar, (B,qb,Kh,G,D)
+        q_pos = q_offset + qi * q_block + q_pos_base          # (qb,)
+        qc = qblk.astype(op_dtype)
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            kv_pos = kj * kv_block + kv_pos_base              # (kb,)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kblk.astype(op_dtype),
+                           preferred_element_type=jnp.float32) * scale
+            mask = kv_pos[None, :] <= (Skv - 1)  # kv padding
+            if causal:
+                mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(op_dtype),
+                vblk.astype(op_dtype), preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kh, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kh, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Kh, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B, Kh, G, qb, D) -> (B, qb, Kh, G, D)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    # (nq, B, qb, Kh, G, D) -> (B, Sq_p, H, D)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def _flash_swa_sliced(q, k, v, *, window: int, q_block: int, q_offset: int,
+                      bf16_compute: bool):
+    """Sliding-window attention with a fixed-size KV slice per q block.
+
+    Every q block attends to exactly [start, start + window + q_block) where
+    start = block_start − window: a *static-size* dynamic_slice, so compute
+    and bytes scale with the window, not the sequence (the masked baseline
+    wastes S/window).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Kh, _ = k.shape
+    G = H // Kh
+    scale = D ** -0.5
+    op_dtype = q.dtype if bf16_compute else jnp.float32
+    q_block = min(q_block, Sq)
+    assert Sq % q_block == 0, "SWA sliced path expects q_block | Sq"
+    nq = Sq // q_block
+    span = window + q_block
+    # pad kv on the left by `window` so every slice is in range
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, q_block, Kh, G, D).transpose(1, 0, 2, 3, 4, 5)
+
+    q_pos_base = jnp.arange(q_block)
+    kv_pos_base = jnp.arange(span)
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk
+        # kv tokens [qi·qb − window, qi·qb + qb) in original coordinates
+        start = qi * q_block                     # index into left-padded kv
+        ks = jax.lax.dynamic_slice(kp, (0, start, 0, 0),
+                                   (B, span, Kh, D))
+        vs = jax.lax.dynamic_slice(vp, (0, start, 0, 0),
+                                   (B, span, Kh, D))
+        q_pos = q_offset + qi * q_block + q_pos_base            # (qb,)
+        kv_pos = qi * q_block - window + kv_pos_base            # (span,)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk.astype(op_dtype),
+                       ks.astype(op_dtype),
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kv_pos[None, :] >= 0) & (kv_pos[None, :] <= q_pos[:, None]) \
+            & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        out = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(op_dtype),
+                         vs.astype(op_dtype),
+                         preferred_element_type=jnp.float32)
+        out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)     # (B,qb,Kh,G,D)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_train(p: Dict, x: jax.Array, cfg: ModelConfig,
+                    positions: jax.Array, return_kv: bool = False):
+    q, k, v = qkv_proj(p, x, cfg, positions)
+    out = flash_attention_jnp(
+        q, k, v, causal=True, window=cfg.window,
+        q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block,
+        bf16_compute=cfg.flash_bf16, swa_sliced_kv=cfg.swa_sliced_kv)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    y = jnp.einsum("bsh,hm->bsm", out, p["wo"])
+    if not return_kv:
+        return y
+    # flat-layout cache piece for decode continuation (ring-windowed archs
+    # keep the last `window` positions)
+    Kh, D = cfg.num_kv_heads, cfg.head_dim
+    if cfg.window is not None and S > cfg.window:
+        k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+    return y, {"k": k.reshape(B, -1, Kh * D).astype(jnp.bfloat16),
+               "v": v.reshape(B, -1, Kh * D).astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, contiguous KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    """KV cache stored FLAT (B, S, Kh·D): the flattened feature dim is
+    divisible by the model axis for every assigned arch even when Kh is not
+    (command-r/qwen2.5/llava have Kh=8 < 16; hymba Kh=5), so tensor-parallel
+    cache sharding never falls back to replication."""
+    if cfg.window is not None:
+        max_len = min(max_len, cfg.window)
+    Kh, D = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, Kh * D), dtype),
+        "v": jnp.zeros((batch, max_len, Kh * D), dtype),
+    }
+
+
+def kv_cache_specs() -> Dict:
+    return {"k": ("layers", "batch", "kv_seq", "kv_flat"),
+            "v": ("layers", "batch", "kv_seq", "kv_flat")}
+
+
+def attention_decode(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+                     cur_index: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, M); cur_index: (B,) current write position (tokens so far).
+
+    Sliding-window archs store a ring buffer of ``window`` positions.
+    """
+    B = x.shape[0]
+    H, Kh, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // Kh
+    S = cache["k"].shape[1]
+    q, k_new, v_new = qkv_proj(p, x, cfg, cur_index[:, None])
+    slot = cur_index % S if cfg.window is not None else cur_index
+    b_idx = jnp.arange(B)
+    k_flat = cache["k"].at[b_idx, slot].set(
+        k_new[:, 0].reshape(B, Kh * D).astype(cache["k"].dtype))
+    v_flat = cache["v"].at[b_idx, slot].set(
+        v_new[:, 0].reshape(B, Kh * D).astype(cache["v"].dtype))
+    k = k_flat.reshape(B, S, Kh, D)
+    v = v_flat.reshape(B, S, Kh, D)
+
+    kv_pos = jnp.arange(S)[None, :]                        # (1,S) slot index
+    if cfg.window is not None:
+        # slot s holds token (cur - ((slot - s) mod S)) — valid if within window
+        age = (slot[:, None] - kv_pos) % S
+        valid = (age < jnp.minimum(cur_index[:, None] + 1, S))
+    else:
+        valid = kv_pos <= cur_index[:, None]
+
+    qh = q.reshape(B, Kh, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k.astype(jnp.float32)) * (D ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * D).astype(x.dtype)
+    y = jnp.einsum("bsh,hm->bsm", out, p["wo"])
+    return y, {"k": k_flat, "v": v_flat}

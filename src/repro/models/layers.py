@@ -1,0 +1,103 @@
+"""Shared building blocks: params-with-logical-axes, norms, RoPE, MLP.
+
+Every parameter leaf is created through ``param()`` which also records a
+tuple of *logical axis names*; ``repro.distributed.sharding`` maps those to
+mesh axes. Param trees are plain nested dicts (pytrees); specs trees mirror
+them exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+class SpecTree:
+    """Collects logical-axis specs alongside params during init."""
+
+    def __init__(self) -> None:
+        self.specs: Dict = {}
+
+    def sub(self, name: str) -> "SpecTree":
+        child = SpecTree()
+        self.specs[name] = child.specs
+        return child
+
+    def record(self, name: str, axes: Tuple[Optional[str], ...]) -> None:
+        self.specs[name] = axes
+
+
+def param(key: jax.Array, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+          specs: SpecTree, name: str, scale: Optional[float] = None,
+          dtype=PARAM_DTYPE) -> jax.Array:
+    assert len(shape) == len(axes), f"{name}: shape {shape} vs axes {axes}"
+    specs.record(name, axes)
+    if scale is None:
+        scale = shape[0] ** -0.5 if len(shape) > 1 else 0.0
+    if scale == 0.0:
+        return jnp.zeros(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def ones_param(shape, axes, specs: SpecTree, name: str, dtype=PARAM_DTYPE):
+    specs.record(name, axes)
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    if x.ndim == angles.ndim + 1:                        # has head axis
+        angles = angles[..., None, :]                    # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jnp.einsum("...m,mf->...f", x, wi)
+    g = jnp.einsum("...m,mf->...f", x, wg)
+    return jnp.einsum("...f,fm->...m", h * jax.nn.silu(g), wo)
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, specs: SpecTree) -> Dict:
+    sub = specs.sub("mlp")
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": param(k1, (d_model, d_ff), ("embed", "ffn"), sub, "wi"),
+        "wg": param(k2, (d_model, d_ff), ("embed", "ffn"), sub, "wg"),
+        "wo": param(k3, (d_ff, d_model), ("ffn", "embed"), sub, "wo"),
+    }
+
+
+def apply_mlp(p: Dict, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["wi"], p["wg"], p["wo"])
+
+
+def init_norm(d_model: int, specs: SpecTree, name: str) -> jax.Array:
+    return ones_param((d_model,), ("embed",), specs, name)

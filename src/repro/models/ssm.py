@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD — state-space duality) mixer: chunked train + step decode.
+
+Training uses the SSD block decomposition (arXiv:2405.21060 §6): a
+quadratic attention-like form *within* each chunk plus a linear recurrence
+over chunk states *across* chunks — all matmuls, MXU-friendly. The whole
+thing is a `lax.scan` over chunks with the SSM state as carry, and the
+chunk body is `jax.checkpoint`-ed so the (K×K×H) intra-chunk tensors are
+recomputed in the backward pass instead of being saved for every chunk.
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token — why SSM
+archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import SpecTree, param
+
+CONV_W = 4  # depthwise conv width
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig, specs: SpecTree) -> Dict:
+    sub = specs.sub("ssm")
+    ks = jax.random.split(key, 10)
+    M, H, P, N = cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Din = H * P
+    conv_ch = Din + 2 * N   # conv over (x, B, C); n_groups = 1
+    return {
+        "w_z": param(ks[0], (M, Din), ("embed", "ssm_inner"), sub, "w_z"),
+        "w_xbc": param(ks[1], (M, conv_ch), ("embed", "ssm_inner"), sub, "w_xbc"),
+        "w_dt": param(ks[2], (M, H), ("embed", None), sub, "w_dt"),
+        "conv_w": param(ks[3], (CONV_W, conv_ch), (None, "ssm_inner"), sub,
+                        "conv_w", scale=0.5),
+        "conv_b": param(ks[4], (conv_ch,), ("ssm_inner",), sub, "conv_b",
+                        scale=0.0),
+        "A_log": param(ks[5], (H,), (None,), sub, "A_log", scale=0.0) + 1.0,
+        "D": param(ks[6], (H,), (None,), sub, "D", scale=0.0) + 1.0,
+        "dt_bias": param(ks[7], (H,), (None,), sub, "dt_bias", scale=0.0),
+        "norm_w": param(ks[8], (Din,), ("ssm_inner",), sub, "norm_w",
+                        scale=0.0) + 1.0,
+        "w_out": param(ks[9], (Din, M), ("ssm_inner", "embed"), sub, "w_out"),
+    }
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+
+
+def _conv_scan(xBC: jax.Array, conv_w: jax.Array, conv_b: jax.Array,
+               L: int) -> jax.Array:
+    pad = jnp.pad(xBC, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + L] * conv_w[i] for i in range(CONV_W))
+    return jax.nn.silu(conv + conv_b)
+
+
+def ssm_train(p: Dict, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array, return_state: bool = False):
+    """x: (B, L, M) → (B, L, M) via chunked SSD."""
+    B, L, M = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Din = H * P
+    K = min(cfg.ssm_chunk, L)
+    assert L % K == 0, "seq_len must be a multiple of ssm_chunk"
+    nC = L // K
+
+    z = jnp.einsum("blm,md->bld", x, p["w_z"])
+    xBC_raw = jnp.einsum("blm,mc->blc", x, p["w_xbc"])
+    xBC = _conv_scan(xBC_raw, p["conv_w"], p["conv_b"], L)
+    dt = jax.nn.softplus(
+        jnp.einsum("blm,mh->blh", x, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                    # (B,L,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+
+    xs = xBC[..., :Din].reshape(B, L, H, P).astype(jnp.float32)
+    Bm = xBC[..., Din:Din + N].astype(jnp.float32)             # (B,L,N)
+    Cm = xBC[..., Din + N:].astype(jnp.float32)
+    dA = dt * A                                                # (B,L,H)
+
+    def to_chunks(a, inner):
+        return a.reshape((B, nC, K) + inner).transpose((1, 0, 2) + tuple(
+            range(3, 3 + len(inner))))
+
+    xs_c = to_chunks(xs, (H, P))       # (nC,B,K,H,P)
+    B_c = to_chunks(Bm, (N,))
+    C_c = to_chunks(Cm, (N,))
+    dt_c = to_chunks(dt, (H,))
+    dA_c = to_chunks(dA, (H,))
+    causal = jnp.tril(jnp.ones((K, K), bool))
+    Dw = p["D"].astype(jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(h_prev, inp):
+        xs_k, B_k, C_k, dt_k, dA_k = inp
+        dA_cs = jnp.cumsum(dA_k, axis=1)                       # (B,K,H)
+        # intra-chunk quadratic form. Clamp the masked (upper-triangular)
+        # entries' exponent: they are positive and overflow in the BACKWARD
+        # pass (inf·0 → NaN through jnp.where); causal entries are ≤ 0 so
+        # the clamp never changes the forward value.
+        diff = jnp.minimum(
+            dA_cs[:, :, None, :] - dA_cs[:, None, :, :], 0.0)  # (B,K,K,H)
+        Lmat = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        qk = jnp.einsum("bin,bjn->bij", C_k, B_k)              # (B,K,K)
+        scores = qk[..., None] * Lmat * dt_k[:, None, :, :]    # (B,K,K,H)
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xs_k)
+        # contribution of the inbound state
+        decay_in = jnp.exp(dA_cs)                              # (B,K,H)
+        y += jnp.einsum("bkn,bhnp,bkh->bkhp", C_k, h_prev, decay_in)
+        y += xs_k * Dw[None, None, :, None]
+        # update state
+        decay_out = jnp.exp(dA_cs[:, -1:, :] - dA_cs)          # (B,K,H)
+        h = h_prev * jnp.exp(dA_cs[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bkh,bkn,bkhp->bhnp", dt_k * decay_out, B_k, xs_k)
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xs_c, B_c, C_c, dt_c, dA_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, Din)         # (B,L,Din)
+    y = _gated_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bld,dm->blm", y.astype(x.dtype), p["w_out"])
+    if not return_state:
+        return out
+    conv_tail = xBC_raw[:, L - (CONV_W - 1):, :].astype(jnp.float32)
+    return out, {"conv": conv_tail, "h": h_final}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_ch = H * P + 2 * N
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, conv_ch), dtype),
+        "h": jnp.zeros((batch, H, N, P), dtype),
+    }
+
+
+def ssm_cache_specs() -> Dict:
+    return {"conv": ("layers", "batch", None, "ssm_inner"),
+            "h": ("layers", "batch", "ssm_heads", None, None)}
+
+
+def ssm_decode(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+               cur_index: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, M); O(1) state update per token."""
+    B = x.shape[0]
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Din = H * P
+    z = jnp.einsum("bm,md->bd", x[:, 0], p["w_z"])
+    xBC = jnp.einsum("bm,mc->bc", x[:, 0], p["w_xbc"])
+    dt_in = jnp.einsum("bm,mh->bh", x[:, 0], p["w_dt"])
+    hist = jnp.concatenate(
+        [cache["conv"], xBC[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(hist.dtype))
+    xBC_c = jax.nn.silu(conv + p["conv_b"].astype(hist.dtype))
+    xs = xBC_c[..., :Din].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC_c[..., Din:Din + N].astype(jnp.float32)
+    Cm = xBC_c[..., Din + N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))     # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)
+    h = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, h) + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = _gated_norm(y.reshape(B, Din), z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bd,dm->bm", y.astype(x.dtype), p["w_out"])
+    return out[:, None, :], {"conv": hist[:, 1:].astype(cache["conv"].dtype),
+                             "h": h}

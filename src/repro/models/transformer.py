@@ -1,0 +1,266 @@
+"""Decoder stack: homogeneous blocks scanned over the layer axis.
+
+Block = pre-norm mixer (attn | ssm | hybrid-parallel) + pre-norm FFN
+(dense | MoE). Parameters of all layers are stacked on a leading "layers"
+axis so the stack is one `lax.scan` — small HLO, fast compiles, and remat
+policy applies per-layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import SpecTree, init_mlp, init_norm, apply_mlp, rms_norm
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ModelConfig, specs: SpecTree) -> Dict:
+    ks = jax.random.split(key, 4)
+    p: Dict = {"norm_mixer": init_norm(cfg.d_model, specs, "norm_mixer"),
+               "norm_ffn": init_norm(cfg.d_model, specs, "norm_ffn")}
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            p["mla"] = mla_mod.init_mla(ks[0], cfg, specs)
+        else:
+            p["attn"] = attn_mod.init_attention(ks[0], cfg, specs)
+    if cfg.uses_ssm:
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg, specs)
+    if cfg.uses_moe:
+        p["moe"] = moe_mod.init_moe(ks[2], cfg, specs)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, specs)
+    return p
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    """Returns (params, logical_specs) with block params stacked on axis 0."""
+    specs = SpecTree()
+    block_specs = SpecTree()
+
+    def one(k):
+        s = SpecTree()
+        p = init_block(k, cfg, s)
+        return p, s
+
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    blocks, s0 = jax.vmap(lambda k: one(k)[0])(keys[: cfg.num_layers]), None
+    # capture specs once (same structure every layer), prefixing "layers"
+    _, spec_obj = one(keys[0])
+    block_axis_specs = jax.tree.map(
+        lambda axes: ("layers",) + tuple(axes),
+        spec_obj.specs, is_leaf=lambda x: isinstance(x, tuple))
+
+    ek, uk = keys[-2], keys[-1]
+    from .layers import param  # local import to avoid cycle noise
+    top = SpecTree()
+    params = {
+        "embed": param(ek, (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                       top, "embed", scale=1.0),
+        "blocks": blocks,
+        "final_norm": init_norm(cfg.d_model, top, "final_norm"),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = param(uk, (cfg.d_model, cfg.padded_vocab),
+                                  ("embed", "vocab"), top, "unembed")
+    spec_tree = dict(top.specs)
+    spec_tree["blocks"] = block_axis_specs
+    return params, spec_tree
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  positions: jax.Array, collect_cache: bool = False):
+    """Returns (x_out, aux_loss, cache_piece-or-None)."""
+    aux = jnp.zeros((), jnp.float32)
+    piece: Dict = {}
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    mixed = jnp.zeros_like(x)
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            r = mla_mod.mla_train(p["mla"], h, cfg, positions,
+                                  return_kv=collect_cache)
+            if collect_cache:
+                r, piece["mla"] = r
+            mixed = mixed + r
+        else:
+            r = attn_mod.attention_train(p["attn"], h, cfg, positions,
+                                         return_kv=collect_cache)
+            if collect_cache:
+                r, piece["attn"] = r
+            mixed = mixed + r
+    if cfg.uses_ssm:
+        s = ssm_mod.ssm_train(p["ssm"], h, cfg, positions,
+                              return_state=collect_cache)
+        if collect_cache:
+            s, piece["ssm"] = s
+        mixed = 0.5 * (mixed + s) if cfg.mixer == "hybrid" else mixed + s
+    x = x + mixed
+    h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    if cfg.uses_moe:
+        y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+    elif cfg.d_ff:
+        y = apply_mlp(p["mlp"], h)
+    else:
+        y = jnp.zeros_like(h)
+    return x + y, aux, (piece if collect_cache else None)
+
+
+def forward(params: Dict, tokens_or_embeds: jax.Array, cfg: ModelConfig,
+            *, remat: str = "none", collect_cache: bool = False,
+            positions: Optional[jax.Array] = None):
+    """tokens (B,S) int32 or precomputed embeddings (B,S,M) for stubbed
+    modality frontends. Returns (logits, aux_loss[, cache])."""
+    if tokens_or_embeds.ndim == 2:
+        x = params["embed"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(params["embed"].dtype)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def scan_fn(carry, layer_params):
+        x, aux = carry
+        x, a, piece = block_forward(layer_params, x, cfg, positions,
+                                    collect_cache=collect_cache)
+        return (x, aux + a), piece
+
+    if remat == "full":
+        scan_fn = jax.checkpoint(scan_fn)
+    (x, aux), cache = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = jnp.einsum("bsm,mv->bsv", x, unembed)
+    if collect_cache:
+        return logits, aux, cache
+    return logits, aux
+
+
+def loss_fn(params: Dict, tokens: jax.Array, targets: jax.Array,
+            cfg: ModelConfig, *, remat: str = "none") -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, tokens, cfg, remat=remat)
+    logits = logits.astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:          # mask pad-vocab columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    nll = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def prefill(params: Dict, tokens_or_embeds: jax.Array, cfg: ModelConfig,
+            *, remat: str = "none") -> Tuple[jax.Array, Dict]:
+    """Prefill pass: last-position logits + populated per-layer cache."""
+    logits, _, cache = forward(params, tokens_or_embeds, cfg, remat=remat,
+                               collect_cache=True)
+    return logits[:, -1], cache
+
+
+# ---------------------------------------------------------------------------
+# decode (single token step over the whole stack)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Per-layer caches stacked on a leading layer axis."""
+    def stack(make):
+        one = make()
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape),
+            one)
+
+    cache: Dict = {}
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            cache["mla"] = stack(lambda: mla_mod.init_mla_cache(cfg, batch, max_len, dtype))
+        else:
+            cache["attn"] = stack(lambda: attn_mod.init_kv_cache(cfg, batch, max_len, dtype))
+    if cfg.uses_ssm:
+        cache["ssm"] = stack(lambda: ssm_mod.init_ssm_cache(cfg, batch))
+    return cache
+
+
+def cache_specs(cfg: ModelConfig) -> Dict:
+    """Logical-axis tree mirroring init_cache()'s structure."""
+    specs: Dict = {}
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            specs["mla"] = mla_mod.mla_cache_specs()
+        else:
+            specs["attn"] = attn_mod.kv_cache_specs()
+    if cfg.uses_ssm:
+        specs["ssm"] = ssm_mod.ssm_cache_specs()
+    return specs
+
+
+def block_decode(p: Dict, x: jax.Array, layer_cache: Dict, cfg: ModelConfig,
+                 cur_index: jax.Array) -> Tuple[jax.Array, Dict]:
+    new_cache: Dict = {}
+    h = rms_norm(x, p["norm_mixer"], cfg.norm_eps)
+    mixed = jnp.zeros_like(x)
+    if cfg.uses_attention:
+        if cfg.attention == "mla":
+            a, new_cache["mla"] = mla_mod.mla_decode(
+                p["mla"], h, layer_cache["mla"], cfg, cur_index)
+        else:
+            a, new_cache["attn"] = attn_mod.attention_decode(
+                p["attn"], h, layer_cache["attn"], cfg, cur_index)
+        mixed = mixed + a
+    if cfg.uses_ssm:
+        s, new_cache["ssm"] = ssm_mod.ssm_decode(
+            p["ssm"], h, layer_cache["ssm"], cfg, cur_index)
+        mixed = 0.5 * (mixed + s) if cfg.mixer == "hybrid" else mixed + s
+    x = x + mixed
+    h = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+    if cfg.uses_moe:
+        y, _ = moe_mod.moe_apply(p["moe"], h, cfg)
+    elif cfg.d_ff:
+        y = apply_mlp(p["mlp"], h)
+    else:
+        y = jnp.zeros_like(h)
+    return x + y, new_cache
+
+
+def decode_step(params: Dict, cache: Dict, token_or_embed: jax.Array,
+                cur_index: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step. token (B,) int32 or embed (B, M). cur_index (B,)."""
+    if token_or_embed.ndim == 1:
+        x = params["embed"][token_or_embed][:, None, :]      # (B,1,M)
+    else:
+        x = token_or_embed[:, None, :].astype(params["embed"].dtype)
+
+    def scan_fn(x, inp):
+        layer_params, layer_cache = inp
+        x, new_c = block_decode(layer_params, x, layer_cache, cfg, cur_index)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params.get("unembed")
+    if unembed is None:
+        unembed = params["embed"].T
+    logits = jnp.einsum("bsm,mv->bsv", x, unembed)[:, 0]
+    return logits, new_cache

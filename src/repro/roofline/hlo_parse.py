@@ -1,0 +1,309 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each ``while`` body ONCE, so a
+scan-over-layers program under-reports FLOPs/bytes/collectives by ~L×.
+This module walks the computation graph with loop-trip multipliers:
+
+* **trip counts**: from the while condition's ``compare(iv, constant),
+  direction=LT`` when the bound is a literal; otherwise (flattened tuple
+  params) the largest scalar-s32 constant operand of the while op — the
+  bound jax scans pass in. Fallback 1.
+* **flops**: ``dot`` = 2 · |out| · |contracted dims|, accumulated through
+  fusion / call / while with multipliers.
+* **bytes**: Σ over *top-level* instructions of operand+output buffer
+  sizes — fusion boundaries approximate HBM traffic (fusion interiors stay
+  in registers/VMEM), so fusion callees contribute flops but not bytes.
+* **collective bytes**: per-category output sizes of all-reduce /
+  all-gather / reduce-scatter / all-to-all / collective-permute,
+  loop-multiplied ('-done' halves skipped).
+
+Text-level and deliberately conservative; methodology documented in
+EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_COUNT = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.+?)\s([a-z][\w\-]*)\((.*)$")
+_OPERANDS = re.compile(r"%[\w.\-]+")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                    r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id",
+    "get-dimension-size", "iota", "while", "conditional", "call",
+}
+
+# callees whose interior is fused (flops yes, bytes no)
+_FUSED_CALLERS = {"fusion", "reduce", "reduce-window", "sort", "scatter",
+                  "map", "select-and-scatter", "custom-call"}
+# callees that are real control flow (flops and bytes, with multiplier)
+_FLOW_CALLERS = {"while", "call", "conditional"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+    calls: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+    const_ints: Dict[str, int] = field(default_factory=dict)
+    param_order: List[str] = field(default_factory=list)  # by parameter index
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            name = m.group(1)
+            if not name.startswith("%"):
+                name = "%" + name
+            cur = Computation(name)
+            comps[name] = cur
+            if line.startswith("ENTRY"):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, type_str, op, rest = mi.groups()
+        ins = Instr(name, type_str, op, rest)
+        for grp in _CALLS.findall(rest):
+            ins.calls.extend(c.strip() for c in grp.split(","))
+        paren_part = rest.split("), ")[0]
+        ins.operands = [o for o in _OPERANDS.findall(paren_part)
+                        if o not in ins.calls]
+        cur.instrs.append(ins)
+        cur.types[name] = type_str
+        if op == "parameter":
+            mi2 = re.match(r"(\d+)\)", rest)
+            idx = int(mi2.group(1)) if mi2 else len(cur.param_order)
+            while len(cur.param_order) <= idx:
+                cur.param_order.append("")
+            cur.param_order[idx] = name
+        if op == "constant":
+            mc = _CONST_INT.search("constant(" + rest)
+            if mc and ("s32[]" in type_str or "u32[]" in type_str
+                       or "s64[]" in type_str):
+                cur.const_ints[name] = int(mc.group(1))
+    return comps, entry
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k,
+                     {c: v * k for c, v in self.coll.items()})
+
+    def add(self, other: "Costs") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for c, v in other.coll.items():
+            self.coll[c] += v
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+class HloAnalyzer:
+    def __init__(self, text: str) -> None:
+        self.comps, self.entry = parse_hlo(text)
+        if not self.entry:
+            self.entry = next(iter(self.comps), "")
+        self._memo: Dict[str, Costs] = {}
+
+    # ---- trip count ---------------------------------------------------------
+    def trip_count(self, ins: Instr, comp: Computation) -> int:
+        # 0) XLA's own annotation (most robust)
+        mt = _TRIP_COUNT.search(ins.rest)
+        if mt:
+            return max(1, int(mt.group(1)))
+        cond = None
+        mc = re.search(r"condition=(%[\w.\-]+)", ins.rest)
+        cond = mc.group(1) if mc else None
+        # 1) literal bound inside the condition
+        ccomp = self.comps.get(cond) if cond else None
+        if ccomp is not None:
+            for ci in ccomp.instrs:
+                if ci.op == "compare" and "direction=LT" in ci.rest:
+                    for op in ci.operands:
+                        if op in ccomp.const_ints:
+                            return max(1, ccomp.const_ints[op])
+        # 2) flattened params: bound is a scalar-int constant operand
+        cands = [comp.const_ints[o] for o in ins.operands
+                 if o in comp.const_ints]
+        cands = [c for c in cands if c > 1]
+        if cands:
+            return max(cands)
+        return 1
+
+    # ---- per-instruction flops ---------------------------------------------
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems = 1
+        for _, dims in _shape_dims(ins.type_str):
+            for d in dims:
+                out_elems *= d
+        contract = 1
+        mc = _CONTRACT.search(ins.rest)
+        if mc and ins.operands:
+            lhs_type = comp.types.get(ins.operands[0])
+            if lhs_type:
+                sd = _shape_dims(lhs_type)
+                if sd:
+                    dims = sd[0][1]
+                    for i in (int(i) for i in mc.group(1).split(",") if i):
+                        if i < len(dims):
+                            contract *= dims[i]
+        return 2.0 * out_elems * contract
+
+    # ---- computation walk ------------------------------------------------------
+    def costs(self, comp_name: Optional[str] = None,
+              include_bytes: bool = True) -> Costs:
+        name = comp_name or self.entry
+        key = f"{name}|{include_bytes}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Costs()
+        self._memo[key] = total
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                total.flops += self._dot_flops(comp, ins)
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in COLLECTIVES and not ins.op.endswith("-done"):
+                total.coll[base] += _type_bytes(ins.type_str)
+            if ins.op == "while":
+                total.add(self._while_costs(ins, comp, include_bytes))
+            elif ins.op in _FUSED_CALLERS:
+                for callee in ins.calls:
+                    total.add(self.costs(callee, include_bytes=False))
+            elif ins.op in ("call", "conditional"):
+                for callee in ins.calls:
+                    total.add(self.costs(callee, include_bytes=include_bytes))
+            if include_bytes and ins.op not in _SKIP_BYTES_OPS:
+                total.bytes += self._instr_bytes(comp, ins)
+        self._memo[key] = total
+        return total
+
+    # ---- access-aware bytes ----------------------------------------------------
+    def _instr_bytes(self, comp: Computation, ins: Instr) -> float:
+        out_b = _type_bytes(ins.type_str)
+        if ins.op in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b                       # read the slice, write it
+        if ins.op == "dynamic-update-slice":
+            upd = (comp.types.get(ins.operands[1])
+                   if len(ins.operands) > 1 else None)
+            return 2.0 * (_type_bytes(upd) if upd else out_b)
+        b = float(out_b)
+        accessed = None
+        if ins.op == "fusion" and ins.calls:
+            accessed = self._fusion_param_bytes(ins.calls[0])
+        for i, op in enumerate(ins.operands):
+            t = comp.types.get(op)
+            if t is None:
+                continue
+            full = _type_bytes(t)
+            if accessed is not None and i < len(accessed) and accessed[i] >= 0:
+                b += min(full, accessed[i])
+            else:
+                b += full
+        return b
+
+    def _fusion_param_bytes(self, callee: str) -> List[float]:
+        """Per-parameter accessed bytes inside a fused computation: a param
+        consumed only by (dynamic-)slice/gather contributes the slice size,
+        not the whole buffer (XLA bytes-accessed semantics)."""
+        comp = self.comps.get(callee)
+        if comp is None:
+            return []
+        users: Dict[str, List[Instr]] = {}
+        for ins in comp.instrs:
+            for o in ins.operands:
+                users.setdefault(o, []).append(ins)
+        out: List[float] = []
+        for pname in comp.param_order:
+            if not pname:
+                out.append(-1.0)
+                continue
+            us = users.get(pname, [])
+            if us and all(u.op in ("dynamic-slice", "slice", "gather")
+                          for u in us):
+                out.append(float(sum(_type_bytes(u.type_str) for u in us)))
+            else:
+                out.append(float(_type_bytes(comp.types.get(pname, ""))))
+        return out
+
+    def _while_costs(self, ins: Instr, comp: Computation,
+                     include_bytes: bool) -> Costs:
+        trips = self.trip_count(ins, comp)
+        mb = re.search(r"body=(%[\w.\-]+)", ins.rest)
+        if not mb:
+            return Costs()
+        return self.costs(mb.group(1), include_bytes=include_bytes).scaled(trips)
+
+
+def analyze_text(text: str) -> Costs:
+    return HloAnalyzer(text).costs()

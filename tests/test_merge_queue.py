@@ -1,0 +1,166 @@
+"""Property tests for the load-aware merge queue + adjacency merging."""
+
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdmissionController, BatchPolicy, MergeQueue,
+                        RegMode, Verb, WorkRequest, contiguous_runs, plan)
+
+
+def wr(dest, addr, n=1, verb=Verb.WRITE):
+    return WorkRequest(verb=verb, dest_node=dest, remote_addr=addr, num_pages=n)
+
+
+# ---------------------------------------------------------------------------
+# contiguous_runs
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 64),
+                          st.integers(1, 4)), max_size=40))
+@settings(max_examples=200, deadline=None)
+def test_runs_preserve_and_merge(reqs):
+    requests = [wr(d, a, n) for d, a, n in reqs]
+    runs = contiguous_runs(requests)
+    # every request appears exactly once
+    flat = [r for run in runs for r in run]
+    assert sorted(r.wr_id for r in flat) == sorted(r.wr_id for r in requests)
+    for run in runs:
+        # within a run: same dest, same verb, strictly adjacent
+        for a, b in zip(run, run[1:]):
+            assert a.dest_node == b.dest_node
+            assert a.verb == b.verb
+            assert b.remote_addr == a.end_addr
+
+
+@given(st.integers(0, 63), st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_adjacent_sequence_merges_to_one(start, n):
+    requests = [wr(1, start + i) for i in range(n)]
+    runs = contiguous_runs(requests)
+    assert len(runs) == 1 and len(runs[0]) == n
+
+
+def test_nonadjacent_do_not_merge():
+    runs = contiguous_runs([wr(1, 0), wr(1, 2), wr(2, 1)])
+    assert len(runs) == 3
+
+
+# ---------------------------------------------------------------------------
+# batching policies (Table 1 semantics)
+# ---------------------------------------------------------------------------
+
+def _counts(groups):
+    wqes = sum(len(d) for d, _ in groups)
+    mmios = sum(1 if db else len(d) for d, db in groups)
+    return wqes, mmios
+
+
+def test_policy_wqe_mmio_accounting():
+    reqs = [wr(1, 0), wr(1, 1), wr(1, 2), wr(1, 10)]   # run of 3 + lone
+    single = plan(BatchPolicy.SINGLE, reqs)
+    doorbell = plan(BatchPolicy.DOORBELL, reqs)
+    bom = plan(BatchPolicy.BATCH_ON_MR, reqs)
+    hybrid = plan(BatchPolicy.HYBRID, reqs)
+    assert _counts(single) == (4, 4)
+    assert _counts(doorbell) == (4, 1)   # chains but does NOT reduce WQEs
+    assert _counts(bom) == (2, 2)        # merges runs, 1 MMIO per WQE
+    assert _counts(hybrid) == (2, 1)     # fewest WQEs AND fewest MMIOs
+
+
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 32)), min_size=1,
+                max_size=30))
+@settings(max_examples=100, deadline=None)
+def test_policies_never_lose_requests(reqs):
+    requests = [wr(d, a) for d, a in reqs]
+    for policy in BatchPolicy:
+        groups = plan(policy, requests)
+        ids = sorted(r.wr_id for descs, _ in groups
+                     for d in descs for r in d.requests)
+        assert ids == sorted(r.wr_id for r in requests), policy
+
+
+def test_hybrid_never_more_wqes_than_doorbell():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        reqs = [wr(int(d), int(a)) for d, a in
+                zip(rng.integers(0, 3, 20), rng.integers(0, 40, 20))]
+        h, _ = _counts(plan(BatchPolicy.HYBRID, reqs))
+        d, _ = _counts(plan(BatchPolicy.DOORBELL, reqs))
+        assert h <= d
+
+
+# ---------------------------------------------------------------------------
+# merge queue concurrency
+# ---------------------------------------------------------------------------
+
+def test_merge_queue_no_loss_under_concurrency():
+    posted = []
+    lock = threading.Lock()
+
+    def poster(batch):
+        with lock:
+            posted.extend(r.wr_id for r in batch)
+
+    mq = MergeQueue(poster)
+    ids = []
+
+    def worker(base):
+        for i in range(200):
+            r = wr(1, base * 1000 + i)
+            ids.append(r.wr_id)
+            mq.submit(r)
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(posted) == sorted(ids)
+
+
+def test_lone_request_posts_immediately():
+    posted = []
+    mq = MergeQueue(posted.append)
+    mq.submit(wr(1, 5))
+    assert len(posted) == 1 and len(posted[0]) == 1
+    assert mq.solo_posts.value == 1
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_window_blocks_and_releases():
+    ac = AdmissionController(window_bytes=8192)
+    assert ac.acquire(4096)
+    assert ac.acquire(4096)
+    assert not ac.acquire(1, timeout=0.05)        # window full
+    ac.release(4096)
+    assert ac.acquire(4096, timeout=1.0)
+    assert ac.blocked_count.value >= 1
+
+
+def test_admission_zero_inflight_always_admits():
+    ac = AdmissionController(window_bytes=10)
+    assert ac.acquire(4096)                        # oversized but first
+    ac.release(4096)
+
+
+def test_admission_disabled():
+    ac = AdmissionController(window_bytes=None)
+    for _ in range(100):
+        assert ac.acquire(1 << 20)
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_admission_inflight_never_negative(sizes):
+    ac = AdmissionController(window_bytes=1 << 20)
+    for s in sizes:
+        ac.acquire(s)
+    for s in sizes:
+        ac.release(s)
+    assert ac.in_flight_bytes == 0
