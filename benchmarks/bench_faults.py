@@ -1,0 +1,127 @@
+"""Degraded-mode benchmark: throughput + tail latency under FaultPlans.
+
+The cluster scenarios §7 implies but the seed engine could not express:
+
+* ``healthy``      — r=2 over 3 donors, no faults (baseline)
+* ``donor_crash``  — one donor crashes mid-run; writes keep flowing to
+  the surviving replicas, every page reads back intact with ZERO disk
+  reads (the second replica absorbs it), the dead donor is evicted
+* ``straggler``    — one donor gets a 50x latency multiplier; overall
+  throughput barely moves because the straggler delays only its own
+  window slots, and first-responder reads dodge it
+* ``r1_crash``     — replication=1 + write-through disk; after the only
+  replica's donor dies, reads complete via disk fallback
+
+Reported: swap-out kpages/s, swap-in p50/p99 REAL latency (ms), disk
+reads, evictions. The crash scenarios assert the acceptance criteria so
+a regression fails the harness, not just skews a number.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BoxConfig, PollConfig, PollMode, PAGE_SIZE
+from repro.fabric import FaultPlan, LinkConfig
+from repro.memory import MemoryCluster
+
+from .common import csv_row
+
+PAGES = 192
+SCALE = 5e-7
+
+
+def _cluster(replication=2, faults=None, first_responder=False,
+             write_through=False, link=None):
+    cfg = BoxConfig(nic_scale=SCALE,
+                    poll=PollConfig(mode=PollMode.ADAPTIVE, batch=16))
+    return MemoryCluster(num_donors=3, donor_pages=1 << 14, box_config=cfg,
+                         replication=replication, faults=faults,
+                         first_responder=first_responder,
+                         write_through_disk=write_through,
+                         link=link, evict_after=2)
+
+
+def run_scenario(name: str, *, replication=2, faults=None,
+                 first_responder=False, write_through=False, link=None,
+                 crash_at=None, expect_zero_disk_reads=False,
+                 expect_disk_reads=False):
+    c = _cluster(replication=replication, faults=faults,
+                 first_responder=first_responder, write_through=write_through,
+                 link=link)
+    try:
+        rng = np.random.default_rng(0)
+        pages = {i: rng.integers(0, 255, PAGE_SIZE).astype(np.uint8)
+                 for i in range(PAGES)}
+        t0 = time.perf_counter()
+        for pid, data in pages.items():
+            if crash_at is not None and pid == crash_at:
+                c.crash_donor(1)                    # scripted mid-run crash
+            c.paging.swap_out(pid, data, wait=True)
+        out_t = time.perf_counter() - t0
+
+        lat = []
+        t0 = time.perf_counter()
+        for pid, data in pages.items():
+            t1 = time.perf_counter()
+            got = c.paging.swap_in(pid)
+            lat.append((time.perf_counter() - t1) * 1e3)
+            assert np.array_equal(got, data), \
+                f"{name}: page {pid} corrupted"     # zero-corruption criterion
+        in_t = time.perf_counter() - t0
+        st = c.paging.stats()
+        if expect_zero_disk_reads:
+            assert st["disk_reads"] == 0, f"{name}: hit disk: {st}"
+        if expect_disk_reads:
+            assert st["disk_reads"] > 0, f"{name}: never hit disk: {st}"
+        lat = np.asarray(lat)
+        return {
+            "swapout_kpages_s": PAGES / out_t / 1e3,
+            "swapin_kpages_s": PAGES / in_t / 1e3,
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "disk_reads": st["disk_reads"],
+            "evictions": st["evictions"],
+        }
+    finally:
+        c.close()
+
+
+SCENARIOS = {
+    "healthy": dict(),
+    "donor_crash": dict(crash_at=PAGES // 2, expect_zero_disk_reads=True),
+    "straggler": dict(
+        faults=FaultPlan().slow(1, 50.0), first_responder=True,
+        link=LinkConfig(latency_us=20.0)),
+    "r1_crash": dict(replication=1, write_through=True,
+                     crash_at=PAGES // 2, expect_disk_reads=True),
+}
+
+
+def main() -> list:
+    out = []
+    results = {}
+    for name, kw in SCENARIOS.items():
+        r = run_scenario(name, **kw)
+        results[name] = r
+        out.append(csv_row(
+            f"faults/{name}", 1e3 / max(r["swapout_kpages_s"], 1e-9),
+            f"swapout_kpages_s={r['swapout_kpages_s']:.1f};"
+            f"swapin_kpages_s={r['swapin_kpages_s']:.1f};"
+            f"p50_ms={r['p50_ms']:.3f};p99_ms={r['p99_ms']:.3f};"
+            f"disk_reads={r['disk_reads']};evictions={r['evictions']}"))
+    crash_cost = (results["healthy"]["swapout_kpages_s"]
+                  / max(results["donor_crash"]["swapout_kpages_s"], 1e-9))
+    out.append(csv_row(
+        "faults/crash_overhead", 0.0,
+        f"healthy_vs_crash={crash_cost:.2f}x;"
+        f"crash_disk_reads={results['donor_crash']['disk_reads']};"
+        f"straggler_p99_ms={results['straggler']['p99_ms']:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

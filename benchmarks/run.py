@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.bench_polling",          # Fig. 9 + Fig. 10
     "benchmarks.bench_channels",         # Fig. 11
     "benchmarks.bench_paging",           # Figs. 12/13
+    "benchmarks.bench_faults",           # degraded-mode: crash/straggler/disk
     "benchmarks.bench_serving",          # Fig. 14
     "benchmarks.bench_paged_attention",  # TPU kernel embodiment
 ]

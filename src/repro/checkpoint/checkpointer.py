@@ -21,6 +21,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import compat  # noqa: F401  (jax.tree.flatten_with_path shim)
+
 PyTree = Any
 
 

@@ -1,0 +1,69 @@
+"""Version compatibility shims for the installed JAX.
+
+The codebase targets the current JAX mesh API (``jax.set_mesh``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``); older
+installs (≤ 0.4.x) lack those names. ``install()`` backfills them with
+semantically-equivalent fallbacks for the single-process meshes used
+here, so the same code runs on both. Import is idempotent and touches
+nothing when the real APIs exist.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import inspect
+
+
+def install() -> None:
+    import jax
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType:  # matches the spelling of the modern enum
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            import math
+            import numpy as np
+            n = math.prod(axis_shapes)
+            devs = list(devices) if devices is not None else jax.devices()[:n]
+            return jax.sharding.Mesh(
+                np.asarray(devs).reshape(axis_shapes), axis_names)
+
+        jax.make_mesh = make_mesh
+    else:
+        try:
+            has_axis_types = "axis_types" in inspect.signature(
+                jax.make_mesh).parameters
+        except (ValueError, TypeError):
+            has_axis_types = True
+        if not has_axis_types:
+            _orig_make_mesh = jax.make_mesh
+
+            def make_mesh(axis_shapes, axis_names, *args, axis_types=None,
+                          **kwargs):
+                return _orig_make_mesh(axis_shapes, axis_names, *args,
+                                       **kwargs)
+
+            jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            # the legacy Mesh context manager provides the same ambient
+            # mesh for jit/shard_map on single-process meshes
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.tree, "flatten_with_path"):
+        jax.tree.flatten_with_path = jax.tree_util.tree_flatten_with_path
+
+
+install()

@@ -19,7 +19,7 @@ from .merge_queue import MergeQueue
 from .nic import NICCostModel, SimulatedNIC
 from .paging import DiskTier, RemotePagingSystem
 from .polling import Poller, PollConfig, PollMode
-from .rdmabox import BoxConfig, RDMABox, TransferFuture
+from .rdmabox import BoxConfig, RDMABox, TransferError, TransferFuture
 from .region import RegionDirectory, RemoteRegion
 
 __all__ = [
@@ -29,5 +29,5 @@ __all__ = [
     "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",
     "NICCostModel", "SimulatedNIC", "DiskTier", "RemotePagingSystem",
     "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
-    "TransferFuture", "RegionDirectory", "RemoteRegion",
+    "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",
 ]

@@ -26,6 +26,12 @@ class Channel:
         self.qp: QueuePair = nic.create_qp(dest_node, self.cq)
         self.nic = nic
 
+    @property
+    def link(self):
+        """The fabric link this channel's QP is bound to (None when the
+        NIC is standalone)."""
+        return self.qp.link
+
     def post(self, descs, doorbell: bool = False) -> None:
         self.nic.post(self.qp, descs, doorbell=doorbell)
 

@@ -98,6 +98,8 @@ class WCStatus(enum.Enum):
     SUCCESS = 0
     FLUSH_ERR = 1
     REMOTE_ERR = 2
+    RETRY_EXC_ERR = 3     # transport retries exhausted — peer crashed/unreachable
+    RNR_RETRY_ERR = 4     # receiver-not-ready — transient, retry may succeed
 
 
 @dataclass

@@ -119,6 +119,7 @@ class NICStats:
     rdma_ops: AtomicCounter = field(default_factory=AtomicCounter)   # == WQEs
     cache_misses: AtomicCounter = field(default_factory=AtomicCounter)
     completions: AtomicCounter = field(default_factory=AtomicCounter)
+    wc_errors: AtomicCounter = field(default_factory=AtomicCounter)
     bytes_on_wire: AtomicCounter = field(default_factory=AtomicCounter)
     memcpy_pages: AtomicCounter = field(default_factory=AtomicCounter)
     registrations: AtomicCounter = field(default_factory=AtomicCounter)
@@ -131,6 +132,7 @@ class NICStats:
             "rdma_ops": self.rdma_ops.value,
             "cache_misses": self.cache_misses.value,
             "completions": self.completions.value,
+            "wc_errors": self.wc_errors.value,
             "bytes_on_wire": self.bytes_on_wire.value,
             "memcpy_pages": self.memcpy_pages.value,
             "registrations": self.registrations.value,
@@ -138,16 +140,19 @@ class NICStats:
 
 
 class QueuePair:
-    """Send queue bound to one destination node and one CQ."""
+    """Send queue bound to one destination node, one CQ, and — when the
+    NIC belongs to a fabric — the link to that destination."""
 
     _counter = 0
 
-    def __init__(self, nic: "SimulatedNIC", dest_node: int, cq: CompletionQueue):
+    def __init__(self, nic: "SimulatedNIC", dest_node: int, cq: CompletionQueue,
+                 link=None):
         QueuePair._counter += 1
         self.qp_id = QueuePair._counter
         self.nic = nic
         self.dest_node = dest_node
         self.cq = cq
+        self.link = link
         self.pu_index = self.qp_id % nic.cost.num_pus
 
 
@@ -161,14 +166,19 @@ class SimulatedNIC:
         cost: Optional[NICCostModel] = None,
         scale: float = 1e-6,
         kernel_space: bool = True,
+        fabric=None,
+        origin: Optional[float] = None,
     ) -> None:
         self.node_id = node_id
         self.directory = directory
         self.cost = cost or NICCostModel()
         self.scale = scale
         self.kernel_space = kernel_space
+        # duck-typed Fabric (repro.fabric): provides .link(src, dst),
+        # .faults, and .delay; None keeps the standalone single-NIC world
+        self._fabric = fabric
         self.stats = NICStats()
-        origin = time.perf_counter()
+        origin = time.perf_counter() if origin is None else origin
         self._origin = origin
         self._wire = Pacer(scale, origin)
         self._pu_pacers = [Pacer(scale, origin) for _ in range(self.cost.num_pus)]
@@ -177,17 +187,32 @@ class SimulatedNIC:
         self._pu_cv = [threading.Condition() for _ in range(self.cost.num_pus)]
         self._outstanding = AtomicCounter()
         self._running = True
-        self._threads = [
-            threading.Thread(target=self._pu_loop, args=(i,), daemon=True,
-                             name=f"nic{node_id}-pu{i}")
-            for i in range(self.cost.num_pus)
-        ]
-        for t in self._threads:
-            t.start()
+        self._started = False
+        self._start_lock = threading.Lock()
+        self._threads: List[threading.Thread] = []
+
+    def _ensure_started(self) -> None:
+        """PU worker threads spawn on first post — a fabric full of idle
+        donor NICs costs no threads."""
+        if self._started:
+            return
+        with self._start_lock:
+            if self._started or not self._running:
+                return
+            self._threads = [
+                threading.Thread(target=self._pu_loop, args=(i,), daemon=True,
+                                 name=f"nic{self.node_id}-pu{i}")
+                for i in range(self.cost.num_pus)
+            ]
+            for t in self._threads:
+                t.start()
+            self._started = True
 
     # ---- host-facing API -------------------------------------------------
     def create_qp(self, dest_node: int, cq: CompletionQueue) -> QueuePair:
-        return QueuePair(self, dest_node, cq)
+        link = (self._fabric.link(self.node_id, dest_node)
+                if self._fabric is not None else None)
+        return QueuePair(self, dest_node, cq, link=link)
 
     def now_us(self) -> float:
         return (time.perf_counter() - self._origin) / self.scale
@@ -201,6 +226,7 @@ class SimulatedNIC:
         """Post descriptors; ``doorbell=True`` chains them (1 MMIO total)."""
         if not descs:
             return
+        self._ensure_started()
         poster_us = 0.0
         for i, d in enumerate(descs):
             # poster-side MR cost (Fig. 4 path)
@@ -265,14 +291,28 @@ class SimulatedNIC:
             wire_us += cost.cache_miss_us
             self.stats.cache_misses.add(1)
         pacer.charge(fixed_us)
-        # Payload (+ refetches) serialize on the shared wire.
-        complete_v = self._wire.charge(wire_us)
+        faults = self._fabric.faults if self._fabric is not None else None
+        status = (faults.transfer_status(self.node_id, desc.dest_node)
+                  if faults is not None else None)
+        mult = (faults.wire_multiplier(self.node_id, desc.dest_node)
+                if faults is not None else 1.0)
+        # Payload (+ refetches) serialize on the shared egress wire; a
+        # fabric link adds per-link serialization + propagation delay.
+        delay_real = 0.0
+        if qp.link is not None:
+            complete_v, delay_real = qp.link.transmit(
+                self._wire, wire_us, desc.num_pages, desc.nbytes,
+                fault_mult=mult)
+        else:
+            complete_v = self._wire.charge(wire_us * mult)
         self.stats.bytes_on_wire.add(desc.nbytes)
-        status = WCStatus.SUCCESS
-        try:
-            self._move_data(desc)
-        except Exception:   # remote access fault → error completion, never
-            status = WCStatus.REMOTE_ERR        # a silently-dead PU thread
+        if status is None:
+            status = WCStatus.SUCCESS
+            try:
+                self._move_data(desc)
+            except Exception:   # remote access fault → error completion,
+                status = WCStatus.REMOTE_ERR    # never a silently-dead PU
+        # injected fault (crash / transient): the data never moves
         pacer.charge(cost.completion_dma_us)
         self._outstanding.add(-1)  # one WQE retired
         wc = WorkCompletion(
@@ -288,7 +328,14 @@ class SimulatedNIC:
             requests=desc.requests,
         )
         self.stats.completions.add(1)
-        qp.cq.post(wc)
+        if status != WCStatus.SUCCESS:
+            self.stats.wc_errors.add(1)
+        if delay_real > 0.0 and self._fabric is not None:
+            # propagation delay: deliver later without occupying this PU
+            self._fabric.delay.post_at(time.perf_counter() + delay_real,
+                                       qp.cq, wc)
+        else:
+            qp.cq.post(wc)
 
     def _move_data(self, desc: TransferDescriptor) -> None:
         """Actually move the bytes (numpy), page-granular."""

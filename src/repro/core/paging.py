@@ -11,6 +11,20 @@ Replica layout: donor count n, stripe S, replication r. Page p belongs to
 group g = p // S; replica k lives on donor (g + k) % n at offset
 ``k * (donor_pages // r) + (g // n) * S + (p % S)`` — per-replica regions
 are disjoint, so replicas never collide.
+
+Failover (exercised by ``repro.fabric`` fault injection):
+
+* **reads** — replicas are tried in order; an error WorkCompletion
+  (inspected via ``TransferFuture.exception()``, no try/except needed)
+  records a *strike* against the donor and falls over to the next
+  replica. ``first_responder=True`` instead launches reads to all live
+  replicas at once and returns the first success — the straggler-
+  tolerant path. Disk is consulted only when every replica has failed.
+* **writes** — ``wait=True`` collects per-replica outcomes; donors that
+  error are struck, and if *zero* replicas acknowledged, the page is
+  persisted to disk so it is never silently lost.
+* **eviction** — ``evict_after`` consecutive strikes marks a donor
+  failed (no further traffic); a later ``recover_node`` clears it.
 """
 
 from __future__ import annotations
@@ -21,8 +35,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .descriptors import PAGE_SIZE
-from .rdmabox import RDMABox, TransferFuture
+from .descriptors import PAGE_SIZE, AtomicCounter
+from .rdmabox import RDMABox, TransferError, TransferFuture
 
 
 class DiskTier:
@@ -57,6 +71,8 @@ class RemotePagingSystem:
         stripe_pages: int = 16,
         disk: Optional[DiskTier] = None,
         write_through_disk: bool = False,
+        first_responder: bool = False,
+        evict_after: int = 3,
     ) -> None:
         self.box = box
         self.donors = list(box.peers)
@@ -67,9 +83,22 @@ class RemotePagingSystem:
         self.replica_region = donor_pages // max(1, self.r)
         self.disk = disk or DiskTier()
         self.write_through_disk = write_through_disk
+        self.first_responder = first_responder
+        self.evict_after = evict_after
         self._failed: set[int] = set()
+        self._strikes: Dict[int, int] = {}
+        # (donor, page_id) pairs whose last acked write failed on that donor:
+        # the replica may hold stale data and must not serve reads until a
+        # later write to it succeeds. Only the acked (wait=True) write path
+        # can observe failures, so only it maintains this.
+        self._stale: set[Tuple[int, int]] = set()
         self._lock = threading.Lock()
         self.capacity_pages = (self.replica_region // self.stripe) * self.n * self.stripe
+        # failover telemetry (swap APIs are called from many threads)
+        self.read_failovers = AtomicCounter()   # reads not served by primary
+        self.write_failures = AtomicCounter()   # replica writes that errored
+        self.disk_fallback_reads = AtomicCounter()
+        self.evictions = 0                      # guarded by self._lock
 
     # ---- placement ---------------------------------------------------------
     def replicas(self, page_id: int) -> List[Tuple[int, int]]:
@@ -84,7 +113,7 @@ class RemotePagingSystem:
             out.append((donor, remote))
         return out
 
-    # ---- fault injection -----------------------------------------------------
+    # ---- donor health ------------------------------------------------------
     def fail_node(self, node: int) -> None:
         with self._lock:
             self._failed.add(node)
@@ -92,43 +121,161 @@ class RemotePagingSystem:
     def recover_node(self, node: int) -> None:
         with self._lock:
             self._failed.discard(node)
+            self._strikes.pop(node, None)
 
     def _live(self, node: int) -> bool:
         with self._lock:
             return node not in self._failed
 
-    # ---- swap API ---------------------------------------------------------------
+    def live_replicas(self, page_id: int) -> List[Tuple[int, int]]:
+        return [(d, a) for d, a in self.replicas(page_id) if self._live(d)]
+
+    def _strike(self, node: int) -> None:
+        """One observed failure against a donor; evict on a streak."""
+        with self._lock:
+            s = self._strikes.get(node, 0) + 1
+            self._strikes[node] = s
+            if s >= self.evict_after and node not in self._failed:
+                self._failed.add(node)
+                self.evictions += 1
+
+    def _clear_strikes(self, node: int) -> None:
+        with self._lock:
+            self._strikes.pop(node, None)
+
+    # ---- swap API ---------------------------------------------------------
     def swap_out(self, page_id: int, data: np.ndarray,
-                 wait: bool = False) -> List[TransferFuture]:
-        """Write one page to all live replicas (async by default)."""
+                 wait: bool = False, timeout: float = 30.0) -> List[TransferFuture]:
+        """Write one page to all live replicas (async by default).
+
+        With ``wait=True`` the outcome of every replica write is
+        inspected: failed donors are struck, and when no replica
+        acknowledged (or none was live to begin with), the page goes to
+        disk so durability is never silently lost.
+        """
         buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
         assert buf.nbytes == PAGE_SIZE, "swap_out takes exactly one page"
-        futs = []
-        for donor, remote in self.replicas(page_id):
-            if self._live(donor):
-                futs.append(self.box.write(donor, remote, buf))
-        if self.write_through_disk or not futs:
+        targets = self.live_replicas(page_id)
+        futs = [self.box.write(donor, remote, buf) for donor, remote in targets]
+        on_disk = self.write_through_disk or not futs
+        if on_disk:
             self.disk.write(page_id, buf)
         if wait:
-            for f in futs:
-                f.wait()
+            self._resolve_write_acks(page_id, buf, targets, futs, on_disk,
+                                     timeout)
         return futs
 
-    def swap_in(self, page_id: int, timeout: float = 10.0) -> np.ndarray:
-        """Read a page back: first live replica wins, disk as last resort."""
-        out = np.empty(PAGE_SIZE, dtype=np.uint8)
-        for donor, remote in self.replicas(page_id):
-            if not self._live(donor):
-                continue
+    def swap_out_batch(self, items: List[Tuple[int, np.ndarray]],
+                       timeout: float = 30.0) -> None:
+        """Acked bulk swap-out: post every page's replica writes first (so
+        the merge queue and admission window see the whole burst), then
+        resolve each page's outcomes with the same strike / stale /
+        disk-persist bookkeeping as ``swap_out(wait=True)``."""
+        posted = []
+        for page_id, data in items:
+            buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
+            assert buf.nbytes == PAGE_SIZE, "swap_out_batch takes whole pages"
+            targets = self.live_replicas(page_id)
+            futs = [self.box.write(d, a, buf) for d, a in targets]
+            on_disk = self.write_through_disk or not futs
+            if on_disk:
+                self.disk.write(page_id, buf)
+            posted.append((page_id, buf, targets, futs, on_disk))
+        for page_id, buf, targets, futs, on_disk in posted:
+            self._resolve_write_acks(page_id, buf, targets, futs, on_disk,
+                                     timeout)
+
+    def _resolve_write_acks(self, page_id: int, buf: np.ndarray,
+                            targets: List[Tuple[int, int]], futs,
+                            on_disk: bool, timeout: float) -> None:
+        acks = 0
+        for (donor, _), fut in zip(targets, futs):
             try:
-                self.box.read(donor, remote, 1, out=out).wait(timeout=timeout)
-                return out
-            except (RuntimeError, TimeoutError):
-                continue
+                err = fut.exception(timeout=timeout)
+            except TimeoutError:
+                err = TimeoutError()
+            if err is None:
+                acks += 1
+                self._clear_strikes(donor)
+                with self._lock:
+                    self._stale.discard((donor, page_id))
+            else:
+                self._strike(donor)
+                self.write_failures.add()
+                with self._lock:     # replica kept its old bytes: stale
+                    self._stale.add((donor, page_id))
+        if acks == 0 and not on_disk:
+            self.disk.write(page_id, buf)   # all replicas failed
+
+    def swap_in(self, page_id: int, timeout: float = 10.0) -> np.ndarray:
+        """Read a page back: replica failover first, disk as last resort.
+
+        ``read_failovers`` counts every read *not* served by the page's
+        primary replica — whether the primary errored live, held stale
+        data from a failed write, or its donor was already evicted.
+        """
+        with self._lock:
+            stale = set(self._stale)
+        reps = [(k, d, a) for k, (d, a) in enumerate(self.replicas(page_id))
+                if self._live(d) and (d, page_id) not in stale]
+        if self.first_responder and len(reps) > 1:
+            data = self._first_responder_read(reps, timeout)
+            if data is not None:
+                return data
+        else:
+            for k, donor, remote in reps:
+                # fresh buffer per attempt: a timed-out straggler read may
+                # complete later and must never scribble on returned data
+                out = np.empty(PAGE_SIZE, dtype=np.uint8)
+                fut = self.box.read(donor, remote, 1, out=out)
+                try:
+                    err = fut.exception(timeout=timeout)
+                except TimeoutError:
+                    self._strike(donor)
+                    continue
+                if err is None:
+                    self._clear_strikes(donor)
+                    if k > 0:
+                        self.read_failovers.add()
+                    return out
+                self._strike(donor)
+        # every replica failed ⇒ the paper's last resort
         data = self.disk.read(page_id)
+        self.disk_fallback_reads.add()
         if data is None:
             raise KeyError(f"page {page_id} lost: all replicas failed, not on disk")
         return data
+
+    def _first_responder_read(self, reps: List[Tuple[int, int, int]],
+                              timeout: float) -> Optional[np.ndarray]:
+        """Race all live replicas; first successful completion wins.
+
+        Each replica reads into its own buffer, so a late (or corrupt-
+        status) straggler can never overwrite the winner's data.
+        """
+        bufs = [np.empty(PAGE_SIZE, dtype=np.uint8) for _ in reps]
+        futs = [self.box.read(d, a, 1, out=b)
+                for (_, d, a), b in zip(reps, bufs)]
+        deadline = time.perf_counter() + timeout
+        pending = set(range(len(futs)))
+        while pending and time.perf_counter() < deadline:
+            for i in sorted(pending):
+                if not futs[i].done():
+                    continue
+                pending.discard(i)
+                err = futs[i].exception(timeout=0)
+                k, donor, _ = reps[i]
+                if err is None:
+                    self._clear_strikes(donor)
+                    if k > 0:
+                        self.read_failovers.add()
+                    return bufs[i]
+                self._strike(donor)
+            if pending:
+                time.sleep(50e-6)
+        for i in pending:               # timed out: strike the stragglers
+            self._strike(reps[i][1])
+        return None
 
     def prefetch(self, page_id: int, out: np.ndarray) -> TransferFuture:
         """Async read from the first live replica (straggler-tolerant path)."""
@@ -136,3 +283,16 @@ class RemotePagingSystem:
             if self._live(donor):
                 return self.box.read(donor, remote, 1, out=out)
         raise RuntimeError("no live replicas to prefetch from")
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            failed = sorted(self._failed)
+        return {
+            "read_failovers": self.read_failovers.value,
+            "write_failures": self.write_failures.value,
+            "disk_fallback_reads": self.disk_fallback_reads.value,
+            "disk_reads": self.disk.reads,
+            "disk_writes": self.disk.writes,
+            "evictions": self.evictions,
+            "failed_donors": failed,
+        }

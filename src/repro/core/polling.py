@@ -32,7 +32,7 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 from .completion import CompletionQueue
-from .descriptors import AtomicCounter, WorkCompletion
+from .descriptors import AtomicCounter, WCStatus, WorkCompletion
 
 Handler = Callable[[WorkCompletion], None]
 
@@ -62,6 +62,7 @@ class _Stats:
         self.poll_calls = AtomicCounter()
         self.empty_polls = AtomicCounter()
         self.handled = AtomicCounter()
+        self.errors = AtomicCounter()        # non-SUCCESS completions seen
         self._cpu_lock = threading.Lock()
         self.cpu_seconds = 0.0
 
@@ -75,6 +76,7 @@ class _Stats:
             "poll_calls": self.poll_calls.value,
             "empty_polls": self.empty_polls.value,
             "handled": self.handled.value,
+            "errors": self.errors.value,
             "cpu_seconds": self.cpu_seconds,
         }
 
@@ -136,9 +138,14 @@ class Poller:
             self._tls.last = now
 
     def _handle(self, wcs: List[WorkCompletion]) -> None:
+        errors = 0
         for wc in wcs:
-            self.handler(wc)
+            if wc.status is not WCStatus.SUCCESS:
+                errors += 1          # error WCs flow through the same
+            self.handler(wc)         # handler — futures surface them
         self.stats.handled.add(len(wcs))
+        if errors:
+            self.stats.errors.add(errors)
 
     # ---- strategies -------------------------------------------------------
     def _busy_loop(self, cq: CompletionQueue) -> None:

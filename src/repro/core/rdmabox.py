@@ -37,6 +37,29 @@ from .polling import Poller, PollConfig, PollMode
 from .region import RegionDirectory
 
 
+class TransferError(RuntimeError):
+    """A transfer completed with an error WorkCompletion.
+
+    Carries the failing WC so callers (the paging failover path, retry
+    policies) can see *what* failed, not just that something did.
+    """
+
+    def __init__(self, wc: WorkCompletion) -> None:
+        super().__init__(
+            f"RDMA transfer failed: {wc.status.name} "
+            f"(wr_id={wc.wr_id}, dest_node={wc.dest_node}, "
+            f"verb={wc.verb.value}, nbytes={wc.nbytes})")
+        self.wc = wc
+        self.status = wc.status
+        self.wr_id = wc.wr_id
+        self.dest_node = wc.dest_node
+
+    @property
+    def transient(self) -> bool:
+        """True for statuses where a retry may succeed (RNR-style)."""
+        return self.status == WCStatus.RNR_RETRY_ERR
+
+
 class TransferFuture:
     """Completion future for one WorkRequest."""
 
@@ -45,20 +68,31 @@ class TransferFuture:
     def __init__(self) -> None:
         self._event = threading.Event()
         self._wc: Optional[WorkCompletion] = None
-        self._error: Optional[str] = None
+        self._error: Optional[TransferError] = None
 
     def set(self, wc: WorkCompletion) -> None:
         self._wc = wc
         if wc.status != WCStatus.SUCCESS:
-            self._error = wc.status.name
+            self._error = TransferError(wc)
         self._event.set()
 
     def wait(self, timeout: Optional[float] = None) -> WorkCompletion:
         if not self._event.wait(timeout=timeout):
             raise TimeoutError("RDMA transfer did not complete in time")
-        if self._error:
-            raise RuntimeError(f"RDMA transfer failed: {self._error}")
+        if self._error is not None:
+            raise self._error
         assert self._wc is not None
+        return self._wc
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[TransferError]:
+        """Non-raising accessor: wait for completion, then return the
+        TransferError (or None on success). Raises only TimeoutError."""
+        if not self._event.wait(timeout=timeout):
+            raise TimeoutError("RDMA transfer did not complete in time")
+        return self._error
+
+    def completion(self) -> Optional[WorkCompletion]:
+        """The WorkCompletion, success or failure; None while in flight."""
         return self._wc
 
     def done(self) -> bool:
@@ -80,16 +114,33 @@ class BoxConfig:
 
 
 class RDMABox:
-    def __init__(self, node_id: int, directory: RegionDirectory,
-                 peers: List[int], config: Optional[BoxConfig] = None) -> None:
+    def __init__(self, node_id: int, directory: Optional[RegionDirectory] = None,
+                 peers: Optional[List[int]] = None,
+                 config: Optional[BoxConfig] = None,
+                 fabric=None) -> None:
+        """The node-level engine facade, as one endpoint of a fabric.
+
+        Pass ``fabric`` (a ``repro.fabric.Fabric``) to join a multi-node
+        cluster: the box's NIC is created by (and owned by) the fabric,
+        wired to per-destination links and the fabric's fault state. The
+        legacy ``(directory, peers)`` form still works — it builds a
+        private single-client fabric with default (near-ideal) links.
+        """
         self.node_id = node_id
         self.cfg = config or BoxConfig()
-        self.directory = directory
-        self.peers = list(peers)
-        self.nic = SimulatedNIC(
-            node_id, directory, cost=self.cfg.nic_cost,
-            scale=self.cfg.nic_scale, kernel_space=self.cfg.kernel_space,
-        )
+        self._owns_fabric = fabric is None
+        if fabric is None:
+            from ..fabric import Fabric   # deferred: fabric imports core
+            if directory is None:
+                raise ValueError("RDMABox needs a directory or a fabric")
+            fabric = Fabric(directory=directory, cost=self.cfg.nic_cost,
+                            scale=self.cfg.nic_scale,
+                            kernel_space=self.cfg.kernel_space)
+        self.fabric = fabric
+        self.directory = fabric.directory
+        self.peers = list(peers) if peers is not None \
+            else fabric.peers_of(node_id)
+        self.nic = fabric.add_node(node_id)
         scq = (self.cfg.poll.scq_count
                if self.cfg.poll.mode == PollMode.SCQ else 0)
         self.channels = ChannelSet(
@@ -136,11 +187,14 @@ class RDMABox:
         self.poller.stop()
         self.channels.close()
         self.nic.close()
+        if self._owns_fabric:
+            self.fabric.close()
 
     def stats(self) -> Dict[str, object]:
         qr, qw = self._queues[Verb.READ], self._queues[Verb.WRITE]
         return {
             "nic": self.nic.stats.snapshot(),
+            "faults": self.fabric.faults.snapshot(),
             "poll": self.poller.stats.snapshot(),
             "admission_blocked": self.admission.blocked_count.value,
             "in_flight_bytes": self.admission.in_flight_bytes,

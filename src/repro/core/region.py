@@ -55,5 +55,8 @@ class RegionDirectory:
     def lookup(self, node_id: int) -> RemoteRegion:
         return self._regions[node_id]
 
+    def __contains__(self, node_id: int) -> bool:
+        return node_id in self._regions
+
     def nodes(self):
         return sorted(self._regions)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat  # noqa: F401  (backfills jax.set_mesh & co.)
+
 
 def _auto(n: int):
     return (jax.sharding.AxisType.Auto,) * n

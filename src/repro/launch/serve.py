@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_reduced
+from repro.fabric import FaultPlan, LinkConfig
 from repro.launch.mesh import make_local_mesh
 from repro.memory import MemoryCluster, PagedKVCache
 from repro.models import decode_step, init_cache, init_stack, prefill
@@ -34,7 +35,32 @@ def main() -> None:
     ap.add_argument("--page-tokens", type=int, default=16)
     ap.add_argument("--spill", action="store_true",
                     help="spill finished sequences' KV to remote memory")
+    # fabric topology + degraded-mode scenario surface
+    ap.add_argument("--donors", type=int, default=2,
+                    help="donor nodes in the remote-memory fabric")
+    ap.add_argument("--replication", type=int, default=2)
+    ap.add_argument("--link-latency-us", type=float, default=1.0,
+                    help="per-link propagation delay (virtual us)")
+    ap.add_argument("--link-gbps", type=float, default=None,
+                    help="per-link bandwidth cap (default: NIC port only)")
+    ap.add_argument("--straggler", type=str, default=None, metavar="NODE:X",
+                    help="make donor NODE a straggler with latency xX")
     args = ap.parse_args()
+
+    fabric_flags = (args.straggler is not None or args.link_gbps is not None
+                    or args.link_latency_us != 1.0 or args.donors != 2
+                    or args.replication != 2)
+    if fabric_flags and not args.spill:
+        ap.error("fabric flags (--donors/--replication/--link-*/--straggler) "
+                 "only take effect with --spill")
+    faults = None
+    if args.straggler:
+        try:
+            node, factor = args.straggler.split(":")
+            faults = FaultPlan().slow(int(node), float(factor))
+        except ValueError:
+            ap.error(f"--straggler expects NODE:FACTOR (e.g. 1:30), "
+                     f"got {args.straggler!r}")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     mesh = make_local_mesh(1, 1)
@@ -81,7 +107,12 @@ def main() -> None:
         paged = None
         cluster = None
         if args.spill:
-            cluster = MemoryCluster(num_donors=2, donor_pages=1 << 14)
+            cluster = MemoryCluster(
+                num_donors=args.donors, donor_pages=1 << 14,
+                replication=args.replication,
+                link=LinkConfig(latency_us=args.link_latency_us,
+                                gbps=args.link_gbps),
+                faults=faults)
             paged = PagedKVCache(num_pages=256, page_tokens=args.page_tokens,
                                  kv_features=kv_features, box=cluster.box)
             for b in range(B):

@@ -1,6 +1,6 @@
 from .kv_cache import PageAllocator, PagedKVCache, PageRun, plan_page_runs
-from .offload import OffloadManager
+from .offload import OffloadConfig, OffloadManager
 from .pool import MemoryCluster
 
 __all__ = ["PageAllocator", "PagedKVCache", "PageRun", "plan_page_runs",
-           "OffloadManager", "MemoryCluster"]
+           "OffloadConfig", "OffloadManager", "MemoryCluster"]

@@ -10,6 +10,7 @@ mitigation by backpressure + first-responder replica reads).
 from __future__ import annotations
 
 import threading
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -20,9 +21,27 @@ from ..core.paging import RemotePagingSystem
 PyTree = Any
 
 
+@dataclass
+class OffloadConfig:
+    """Degraded-mode knobs for the offload tier.
+
+    ``acked_writes`` routes swap-outs through the paging layer's
+    acknowledged path: replica failures are struck (feeding donor
+    eviction) and a page whose every replica write fails is persisted to
+    disk instead of being silently lost. ``fetch_timeout`` bounds how
+    long a fetch waits on any single replica before failing over.
+    """
+
+    acked_writes: bool = False
+    write_timeout: float = 30.0
+    fetch_timeout: float = 10.0
+
+
 class OffloadManager:
-    def __init__(self, paging: RemotePagingSystem) -> None:
+    def __init__(self, paging: RemotePagingSystem,
+                 config: Optional[OffloadConfig] = None) -> None:
         self.paging = paging
+        self.cfg = config or OffloadConfig()
         self._meta: Dict[str, Dict] = {}
         self._next_page = 0
         self._lock = threading.Lock()
@@ -50,6 +69,15 @@ class OffloadManager:
         pad = n_pages * PAGE_SIZE - raw.nbytes
         if pad:
             raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+        if wait and self.cfg.acked_writes:
+            # bulk path: every page posts before any ack is awaited, so
+            # the merge queue sees the whole burst; per-replica outcomes
+            # (strikes, stale marks, disk persistence) are then resolved
+            self.paging.swap_out_batch(
+                [(meta["base"] + i, raw[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
+                 for i in range(n_pages)],
+                timeout=self.cfg.write_timeout)
+            return
         futs = []
         for i in range(n_pages):
             futs.extend(self.paging.swap_out(
@@ -72,7 +100,7 @@ class OffloadManager:
         buf = np.empty(meta["n_pages"] * PAGE_SIZE, np.uint8)
         for i in range(meta["n_pages"]):
             buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE] = self.paging.swap_in(
-                meta["base"] + i)
+                meta["base"] + i, timeout=self.cfg.fetch_timeout)
         raw = buf[: meta["nbytes"]]
         return raw.view(meta["dtype"]).reshape(meta["shape"]).copy()
 

@@ -1,33 +1,68 @@
-"""Cluster fixture: donor nodes' memory regions + an RDMABox per client.
+"""Cluster fixture: the fabric-builder facade.
 
 Mirrors the paper's deployment (§7.1): one client node running the
-workload, N remote peers donating DRAM, replication across donors.
+workload, N remote peers donating DRAM, replication across donors — now
+built on ``repro.fabric``: every node (client and donors) gets its own
+simulated NIC, node pairs are joined by an explicit link model, and a
+``FaultPlan`` scripts degraded-mode scenarios (donor crash, stragglers,
+transient errors, congestion). Defaults are API-compatible with the old
+single-NIC fixture, so existing callers keep working unchanged.
 """
 
 from __future__ import annotations
 
 from typing import List, Optional
 
-from ..core import (BoxConfig, RDMABox, RegionDirectory, RemotePagingSystem,
-                    RemoteRegion)
+from ..core import BoxConfig, DiskTier, RDMABox, RemotePagingSystem
+from ..fabric import Fabric, FaultPlan, LinkConfig
 
 
 class MemoryCluster:
     def __init__(self, num_donors: int = 3, donor_pages: int = 16384,
                  box_config: Optional[BoxConfig] = None,
-                 replication: int = 2, client_node: int = 0) -> None:
-        self.directory = RegionDirectory()
-        self.donors: List[int] = list(range(1, num_donors + 1))
+                 replication: int = 2, client_node: int = 0,
+                 link: Optional[LinkConfig] = None,
+                 faults: Optional[FaultPlan] = None,
+                 stripe_pages: int = 16,
+                 write_through_disk: bool = False,
+                 first_responder: bool = False,
+                 evict_after: int = 3,
+                 disk: Optional[DiskTier] = None,
+                 seed: int = 0) -> None:
+        cfg = box_config or BoxConfig()
+        self.fabric = Fabric(cost=cfg.nic_cost, scale=cfg.nic_scale,
+                             kernel_space=cfg.kernel_space, link=link,
+                             faults=faults, seed=seed)
+        self.donors: List[int] = [client_node + 1 + i for i in range(num_donors)]
         self.donor_pages = donor_pages
         for node in self.donors:
-            self.directory.register(RemoteRegion(node, donor_pages))
-        self.box = RDMABox(client_node, self.directory, self.donors,
-                           config=box_config)
-        self.paging = RemotePagingSystem(self.box, donor_pages,
-                                         replication=replication)
+            self.fabric.add_node(node, donor_pages=donor_pages)
+        self.box = RDMABox(client_node, peers=self.donors, config=box_config,
+                           fabric=self.fabric)
+        self.directory = self.fabric.directory
+        self.paging = RemotePagingSystem(
+            self.box, donor_pages, replication=replication,
+            stripe_pages=stripe_pages, disk=disk,
+            write_through_disk=write_through_disk,
+            first_responder=first_responder, evict_after=evict_after)
+
+    # ---- fault choreography (delegates to the fabric) ----------------------
+    def crash_donor(self, node: int) -> None:
+        """Mid-run donor crash: transfers to ``node`` start erroring with
+        RETRY_EXC_ERR; the paging layer detects, strikes, and evicts."""
+        self.fabric.crash(node)
+
+    def recover_donor(self, node: int) -> None:
+        self.fabric.recover(node)
+        self.paging.recover_node(node)
+
+    def stats(self) -> dict:
+        return {"box": self.box.stats(), "paging": self.paging.stats(),
+                "fabric": self.fabric.stats()}
 
     def close(self) -> None:
         self.box.close()
+        self.fabric.close()
 
     def __enter__(self) -> "MemoryCluster":
         return self

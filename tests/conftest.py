@@ -7,3 +7,5 @@ assert "xla_force_host_platform_device_count" not in os.environ.get(
     "XLA_FLAGS", ""), "run tests without the dry-run's XLA_FLAGS"
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.compat  # noqa: E402,F401  (JAX version shims before any test)

@@ -1,0 +1,314 @@
+"""Fabric layer: per-node NICs, links, fault injection, paging failover.
+
+These are the degraded-mode scenarios the paper's replication design
+exists for: donor crash mid-run, straggling donors, transient WC errors,
+disk as last resort only when every replica has failed.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (BoxConfig, PollConfig, PollMode, RDMABox,
+                        RegionDirectory, RemotePagingSystem, RemoteRegion,
+                        TransferError, WCStatus, PAGE_SIZE)
+from repro.fabric import Fabric, FaultPlan, LinkConfig
+from repro.memory import MemoryCluster, OffloadConfig, OffloadManager
+
+FAST = BoxConfig(nic_scale=2e-8)
+
+
+def fast_cfg(**kw):
+    return BoxConfig(nic_scale=2e-8, **kw)
+
+
+def page(seed):
+    return np.random.default_rng(seed).integers(0, 255, PAGE_SIZE).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# fabric topology
+# ---------------------------------------------------------------------------
+
+def test_fabric_owns_per_node_nics_and_links():
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(0)
+        fab.add_node(1, donor_pages=256)
+        fab.add_node(2, donor_pages=256)
+        assert fab.nodes() == [0, 1, 2]
+        assert fab.peers_of(0) == [1, 2]
+        assert fab.nic(1).node_id == 1
+        # links are directed, created on demand, and stable
+        assert fab.link(0, 1) is fab.link(0, 1)
+        assert fab.link(0, 1) is not fab.link(1, 0)
+        # donated regions are in the shared directory
+        assert fab.directory.lookup(1).num_pages == 256
+
+
+def test_box_joins_fabric_and_channels_bind_links():
+    with Fabric(scale=2e-8) as fab:
+        for n in (1, 2):
+            fab.add_node(n, donor_pages=1024)
+        box = RDMABox(0, fabric=fab, config=FAST)
+        try:
+            assert box.peers == [1, 2]
+            for peer in (1, 2):
+                for ch in box.channels.channels[peer]:
+                    assert ch.link is fab.link(0, peer)
+            data = page(0)
+            box.write(1, 3, data).wait(10)
+            out = np.zeros(PAGE_SIZE, np.uint8)
+            box.read(1, 3, 1, out=out).wait(10)
+            assert np.array_equal(out, data)
+            assert fab.link(0, 1).transfers.value >= 2
+        finally:
+            box.close()
+
+
+def test_legacy_rdmabox_signature_still_works():
+    directory = RegionDirectory()
+    directory.register(RemoteRegion(1, 512))
+    box = RDMABox(0, directory, [1], config=FAST)
+    try:
+        data = page(1)
+        box.write(1, 0, data).wait(10)
+        out = np.zeros(PAGE_SIZE, np.uint8)
+        box.read(1, 0, 1, out=out).wait(10)
+        assert np.array_equal(out, data)
+    finally:
+        box.close()
+
+
+# ---------------------------------------------------------------------------
+# error completions + TransferFuture reporting
+# ---------------------------------------------------------------------------
+
+def test_transfer_error_carries_completion_details():
+    plan = FaultPlan(seed=3).flaky(1, prob=1.0, max_errors=2)
+    with MemoryCluster(num_donors=1, donor_pages=512, box_config=FAST,
+                       faults=plan) as c:
+        fut = c.box.write(1, 0, page(2))
+        err = fut.exception(timeout=10)          # non-raising accessor
+        assert isinstance(err, TransferError)
+        assert err.status == WCStatus.RNR_RETRY_ERR and err.transient
+        assert err.dest_node == 1 and err.wr_id >= 0
+        assert "RNR_RETRY_ERR" in str(err) and "dest_node=1" in str(err)
+        with pytest.raises(TransferError):
+            fut.wait(1)
+        # transient budget (2) exhausted by merged retries ⇒ healthy again
+        deadline = time.perf_counter() + 10
+        while time.perf_counter() < deadline:
+            if c.box.write(1, 1, page(3)).exception(timeout=10) is None:
+                break
+        else:
+            pytest.fail("transient fault never cleared")
+        assert c.box.poller.stats.errors.value >= 1
+        assert c.box.stats()["nic"]["wc_errors"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# replication failover (the acceptance scenarios)
+# ---------------------------------------------------------------------------
+
+def test_midrun_crash_r2_no_corruption_no_disk():
+    """replication=2 + scripted mid-run donor crash: the second replica
+    absorbs every read; zero data corruption, zero disk reads."""
+    with MemoryCluster(num_donors=3, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=1) as c:
+        pages = {i: page(i) for i in range(48)}
+        for pid in range(24):                       # first half, healthy
+            c.paging.swap_out(pid, pages[pid], wait=True)
+        c.crash_donor(1)                            # scripted mid-run crash
+        for pid in range(24, 48):                   # second half, degraded
+            c.paging.swap_out(pid, pages[pid], wait=True)
+        for pid, data in pages.items():
+            assert np.array_equal(c.paging.swap_in(pid), data), pid
+        st = c.paging.stats()
+        assert st["disk_reads"] == 0, st            # replica absorbed it all
+        assert st["evictions"] >= 1 and 1 in st["failed_donors"]
+        assert st["read_failovers"] >= 1            # at least one fell over
+
+
+def test_midrun_crash_r1_disk_fallback():
+    """replication=1: once the only replica's donor dies, reads must fall
+    back to disk — and only then."""
+    with MemoryCluster(num_donors=2, donor_pages=4096, box_config=FAST,
+                       replication=1, write_through_disk=True,
+                       evict_after=1) as c:
+        pages = {i: page(100 + i) for i in range(16)}
+        for pid, data in pages.items():
+            c.paging.swap_out(pid, data, wait=True)
+        assert c.paging.stats()["disk_reads"] == 0
+        # healthy: no disk reads
+        for pid, data in pages.items():
+            assert np.array_equal(c.paging.swap_in(pid), data)
+        assert c.paging.stats()["disk_reads"] == 0
+        c.crash_donor(1)
+        c.crash_donor(2)
+        for pid, data in pages.items():
+            assert np.array_equal(c.paging.swap_in(pid), data), pid
+        st = c.paging.stats()
+        assert st["disk_fallback_reads"] >= len(pages)
+        assert st["disk_reads"] >= len(pages)
+
+
+def test_disk_only_when_all_replicas_fail():
+    """With r=2, killing ONE donor of the pair must not touch disk; killing
+    both donors of a page's replica set must."""
+    with MemoryCluster(num_donors=2, donor_pages=4096, box_config=FAST,
+                       replication=2, write_through_disk=True,
+                       evict_after=1) as c:
+        data = page(7)
+        c.paging.swap_out(0, data, wait=True)
+        c.crash_donor(c.paging.replicas(0)[0][0])
+        assert np.array_equal(c.paging.swap_in(0), data)
+        assert c.paging.stats()["disk_fallback_reads"] == 0
+        c.crash_donor(c.paging.replicas(0)[1][0])
+        assert np.array_equal(c.paging.swap_in(0), data)
+        assert c.paging.stats()["disk_fallback_reads"] == 1
+
+
+def test_write_failover_persists_page_when_all_replicas_fail():
+    with MemoryCluster(num_donors=2, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=2) as c:
+        c.crash_donor(1)
+        c.crash_donor(2)
+        data = page(9)
+        c.paging.swap_out(0, data, wait=True)       # all writes error
+        assert c.paging.stats()["disk_writes"] >= 1
+        assert np.array_equal(c.paging.swap_in(0), data)    # served by disk
+
+
+def test_donor_eviction_after_repeated_failures():
+    plan = FaultPlan(seed=5).crash(1, after_ops=0)
+    with MemoryCluster(num_donors=3, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=3, faults=plan) as c:
+        for pid in range(12):
+            c.paging.swap_out(pid, page(pid), wait=True)
+        st = c.paging.stats()
+        assert 1 in st["failed_donors"] and st["evictions"] == 1
+        # evicted donor receives no further traffic
+        before = c.fabric.link(0, 1).transfers.value
+        for pid in range(12, 24):
+            c.paging.swap_out(pid, page(pid), wait=True)
+        assert c.fabric.link(0, 1).transfers.value == before
+
+
+# ---------------------------------------------------------------------------
+# stragglers + links
+# ---------------------------------------------------------------------------
+
+def test_straggler_delays_only_its_own_window_slots():
+    """A slow donor must not stall transfers to healthy donors: writes
+    striped across donors complete fast on the healthy paths while the
+    straggler's own slots lag (backpressure claim in memory/offload.py)."""
+    scale = 1e-6
+    plan = FaultPlan().slow(1, 2000.0)
+    cfg = BoxConfig(nic_scale=scale)
+    with MemoryCluster(num_donors=2, donor_pages=4096, box_config=cfg,
+                       replication=1, faults=plan,
+                       link=LinkConfig(latency_us=500.0)) as c:
+        data = page(11)
+        t0 = time.perf_counter()
+        slow_futs = [c.box.write(1, i, data) for i in range(4)]
+        fast_futs = [c.box.write(2, i, data) for i in range(4)]
+        for f in fast_futs:
+            f.wait(10)
+        fast_done = time.perf_counter() - t0
+        for f in slow_futs:
+            f.wait(30)
+        slow_done = time.perf_counter() - t0
+        # straggler link latency is 500us * 2000 = 1s (real, scale 1e-6);
+        # healthy path only pays 500us
+        assert fast_done < 0.5, f"healthy donors stalled: {fast_done:.3f}s"
+        assert slow_done > fast_done * 2
+
+
+def test_first_responder_read_beats_straggler():
+    plan = FaultPlan().slow(1, 2000.0)
+    with MemoryCluster(num_donors=2, donor_pages=4096,
+                       box_config=BoxConfig(nic_scale=1e-6),
+                       replication=2, first_responder=True, faults=plan,
+                       link=LinkConfig(latency_us=500.0)) as c:
+        data = page(13)
+        # replicas of page 0 live on donors 1 and 2; donor 1 straggles
+        c.paging.swap_out(0, data, wait=True)
+        t0 = time.perf_counter()
+        got = c.paging.swap_in(0, timeout=10)
+        dt = time.perf_counter() - t0
+        assert np.array_equal(got, data)
+        assert dt < 0.5, f"first-responder read waited on straggler: {dt:.3f}s"
+        assert c.paging.stats()["disk_reads"] == 0
+
+
+def test_link_congestion_slows_one_path_only():
+    plan = FaultPlan().congest(0, 1, 400.0)
+    with MemoryCluster(num_donors=2, donor_pages=4096,
+                       box_config=BoxConfig(nic_scale=1e-6),
+                       replication=1, faults=plan,
+                       link=LinkConfig(latency_us=800.0)) as c:
+        data = page(17)
+        t0 = time.perf_counter()
+        c.box.write(2, 0, data).wait(10)
+        healthy = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        c.box.write(1, 0, data).wait(10)
+        congested = time.perf_counter() - t0
+        assert congested > healthy * 3, (healthy, congested)
+
+
+# ---------------------------------------------------------------------------
+# offload tier on a degraded fabric
+# ---------------------------------------------------------------------------
+
+def test_stale_replica_never_serves_reads():
+    """A replica whose acked write failed must not serve reads after its
+    donor recovers — the other replica has the newer bytes."""
+    with MemoryCluster(num_donors=3, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=10) as c:
+        v1, v2 = page(21), page(22)
+        c.paging.swap_out(0, v1, wait=True)
+        primary = c.paging.replicas(0)[0][0]
+        c.crash_donor(primary)
+        c.paging.swap_out(0, v2, wait=True)     # primary write fails → stale
+        c.recover_donor(primary)                # donor healthy again, but...
+        got = c.paging.swap_in(0)
+        assert np.array_equal(got, v2), "stale replica served a read"
+        # a later successful write clears the stale mark
+        c.paging.swap_out(0, v1, wait=True)
+        assert np.array_equal(c.paging.swap_in(0), v1)
+
+
+def test_add_node_idempotent_keeps_region_data():
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(1, donor_pages=64)
+        fab.directory.lookup(1).write(0, np.full(PAGE_SIZE, 5, np.uint8))
+        fab.add_node(1, donor_pages=64)         # must NOT zero the region
+        assert fab.directory.lookup(1).read(0, 1).max() == 5
+
+
+def test_fault_trigger_whichever_first():
+    from repro.fabric import FaultState
+    # ops trigger fires even though the time trigger is far in the future
+    plan = FaultPlan().crash(1, after_ops=3, at_us=1e12)
+    st = FaultState(plan, now_us=lambda: 0.0)
+    assert st.transfer_status(0, 1) is None      # op 1
+    assert st.transfer_status(0, 1) is None      # op 2
+    assert st.transfer_status(0, 1) == WCStatus.RETRY_EXC_ERR   # op 3 fires
+    # pure time trigger: default after_ops=0 must NOT fire on ops
+    plan2 = FaultPlan().crash(1, at_us=1e12)
+    st2 = FaultState(plan2, now_us=lambda: 0.0)
+    assert all(st2.transfer_status(0, 1) is None for _ in range(5))
+
+
+def test_offload_roundtrip_survives_donor_crash():
+    with MemoryCluster(num_donors=3, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=1) as c:
+        om = OffloadManager(c.paging, OffloadConfig(acked_writes=True))
+        t = np.random.default_rng(0).normal(size=(64, 64)).astype(np.float32)
+        om.offload("w", t, wait=True)
+        c.crash_donor(2)
+        got = om.fetch("w")
+        assert np.array_equal(got, t)
+        assert c.paging.stats()["disk_reads"] == 0
