@@ -19,6 +19,7 @@ a regression fails the harness, not just skews a number.
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -29,7 +30,8 @@ from repro.memory import MemoryCluster
 
 from .common import csv_row
 
-PAGES = 192
+QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
+PAGES = 48 if QUICK else 192
 SCALE = 5e-7
 
 

@@ -1,0 +1,157 @@
+"""Multi-client fabric benchmark: shared donors, fairness, congestion.
+
+The contention scenarios admission control exists for (ROADMAP items 2-4,
+RDMAvisor's many-tenants argument):
+
+* ``fair_share``     — 2 clients, each with its own RDMABox (merge queue,
+  poller, admission window), hammer ONE shared donor concurrently. The
+  donor serves with deficit-round-robin across clients; per-client
+  throughput skew (max/min) must stay under ``FAIRNESS_BOUND`` and every
+  page must read back intact (zero cross-client corruption — each client
+  pages into a disjoint slice of the donor region).
+* ``contention_cost`` — the same per-client workload run solo vs shared:
+  the slowdown factor is the price of sharing the donor (bounded, not a
+  collapse, because donor-side service is paced and fair).
+* ``congestion_window`` — a congestion episode on client 0's donor path;
+  the CongestionAwareHook multiplicatively shrinks the admission window
+  during the episode and re-expands it after (NP-RDMA-style).
+
+Asserted here so a fairness or congestion-control regression fails the
+harness, not just skews a number.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro.core import BoxConfig, CongestionAwareHook, PAGE_SIZE
+from repro.fabric import LinkConfig
+from repro.memory import MemoryCluster
+
+from .common import csv_row
+
+QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
+PAGES = 32 if QUICK else 128
+SCALE = 5e-7
+# documented fairness bound: max/min per-client throughput when clients
+# run identical workloads against one shared donor
+FAIRNESS_BOUND = 2.0
+
+
+def _page(seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 255, PAGE_SIZE).astype(np.uint8)
+
+
+def _client_workload(cluster: MemoryCluster, idx: int, pages: int,
+                     out: dict) -> None:
+    """One client's swap-out + verify swap-in pass (its own page space)."""
+    paging = cluster.pagings[idx]
+    datas = {pid: _page(1000 * idx + pid) for pid in range(pages)}
+    t0 = time.perf_counter()
+    for pid, data in datas.items():
+        paging.swap_out(pid, data, wait=True)
+    for pid, data in datas.items():
+        got = paging.swap_in(pid)
+        assert np.array_equal(got, data), \
+            f"client {idx}: page {pid} corrupted"   # zero-corruption criterion
+    out[idx] = 2 * pages / (time.perf_counter() - t0)
+
+
+def run_shared(num_clients: int, pages: int) -> dict:
+    cfg = BoxConfig(nic_scale=SCALE)
+    with MemoryCluster(num_donors=1, donor_pages=1 << 14, box_config=cfg,
+                       replication=1, num_clients=num_clients) as c:
+        rates: dict = {}
+        ts = [threading.Thread(target=_client_workload, args=(c, i, pages, rates))
+              for i in range(num_clients)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        donor = c.donors[0]
+        service = c.fabric.stats()["service"].get(donor, {})
+        return {"rates": rates, "service": service}
+
+
+def scenario_fair_share() -> list:
+    r = run_shared(2, PAGES)
+    rates = list(r["rates"].values())
+    ratio = max(rates) / max(min(rates), 1e-9)
+    assert ratio < FAIRNESS_BOUND, \
+        f"per-client throughput skew {ratio:.2f}x breaches " \
+        f"fairness bound {FAIRNESS_BOUND}x: {r['rates']}"
+    served = {cl: s["bytes"] for cl, s in r["service"].items()}
+    return [csv_row(
+        "multiclient/fair_share", 1e6 / max(min(rates), 1e-9),
+        f"client_pages_s={[f'{x:.0f}' for x in rates]};"
+        f"skew={ratio:.2f}x;bound={FAIRNESS_BOUND}x;"
+        f"donor_served_bytes={served}")]
+
+
+def scenario_contention_cost() -> list:
+    solo = run_shared(1, PAGES)["rates"][0]
+    shared = run_shared(2, PAGES)["rates"]
+    per_client = sum(shared.values()) / len(shared)
+    cost = solo / max(per_client, 1e-9)
+    return [csv_row(
+        "multiclient/contention_cost", 1e6 / max(per_client, 1e-9),
+        f"solo_pages_s={solo:.0f};shared_pages_s={per_client:.0f};"
+        f"slowdown={cost:.2f}x")]
+
+
+def scenario_congestion_window() -> list:
+    hooks: list = []
+
+    def factory() -> CongestionAwareHook:
+        hook = CongestionAwareHook()
+        hooks.append(hook)
+        return hook
+
+    cfg = BoxConfig(nic_scale=1e-7)
+    n = max(PAGES // 2, 48)
+    with MemoryCluster(num_donors=1, donor_pages=1 << 14, box_config=cfg,
+                       replication=1, num_clients=1,
+                       link=LinkConfig(latency_us=300.0),
+                       admission_hook_factory=factory) as c:
+        hook = hooks[0]
+        donor = c.donors[0]
+        data = _page(7)
+        for pid in range(n):                      # healthy: calibrate
+            c.paging.swap_out(pid, data, wait=True)
+        healthy = hook.window_fraction
+        c.congest_path(0, donor, 20.0)            # episode starts (both dirs)
+        for pid in range(n):
+            c.paging.swap_out(pid, data, wait=True)
+        congested = hook.window_fraction
+        c.clear_path(0, donor)                    # episode ends
+        for pid in range(2 * n):
+            c.paging.swap_out(pid % n, data, wait=True)
+        recovered = hook.window_fraction
+        assert congested < healthy, \
+            f"window never shrank under congestion: {hook.snapshot()}"
+        assert recovered > congested, \
+            f"window never re-expanded: {hook.snapshot()}"
+        snap = hook.snapshot()
+        return [csv_row(
+            "multiclient/congestion_window", 0.0,
+            f"healthy_frac={healthy:.3f};congested_frac={congested:.3f};"
+            f"recovered_frac={recovered:.3f};shrinks={snap['shrinks']};"
+            f"grows={snap['grows']}")]
+
+
+def main() -> list:
+    out = []
+    out += scenario_fair_share()
+    out += scenario_contention_cost()
+    out += scenario_congestion_window()
+    return out
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import (BatchPolicy, BoxConfig, NICCostModel, PollConfig,
-                        PollMode, RDMABox, RegionDirectory, RegMode,
+                        RDMABox, RegionDirectory, RegMode,
                         RemoteRegion, PAGE_SIZE)
 
 DATA = np.arange(PAGE_SIZE, dtype=np.uint8)

@@ -1,12 +1,20 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-  PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+  PYTHONPATH=src python -m benchmarks.run [--only <substr>] [--quick]
+      [--json results.json]
+
+``--quick`` sets ``RDMABOX_BENCH_QUICK=1`` before importing modules;
+benchmarks that honor it (bench_faults, bench_multiclient) shrink their
+workloads for CI smoke runs. ``--json`` additionally writes the rows as
+a JSON document (the artifact CI uploads per PR for the perf trajectory).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -19,17 +27,30 @@ MODULES = [
     "benchmarks.bench_channels",         # Fig. 11
     "benchmarks.bench_paging",           # Figs. 12/13
     "benchmarks.bench_faults",           # degraded-mode: crash/straggler/disk
+    "benchmarks.bench_multiclient",      # shared donors: fairness + congestion
     "benchmarks.bench_serving",          # Fig. 14
     "benchmarks.bench_paged_attention",  # TPU kernel embodiment
 ]
 
 
+def parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke-size workloads (CI)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON")
     args = ap.parse_args()
+    if args.quick:
+        os.environ["RDMABOX_BENCH_QUICK"] = "1"
     print("name,us_per_call,derived")
-    failures = 0
+    rows: list = []
+    failures: list = []
     for modname in MODULES:
         if args.only and args.only not in modname:
             continue
@@ -38,11 +59,17 @@ def main() -> None:
             mod = __import__(modname, fromlist=["main"])
             for line in mod.main():
                 print(line, flush=True)
+                rows.append(parse_row(line))
             print(f"# {modname} done in {time.perf_counter()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001
-            failures += 1
+            failures.append({"module": modname, "error": str(e)})
             print(f"# {modname} FAILED: {e}", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": bool(args.quick), "rows": rows,
+                       "failures": failures}, f, indent=2)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

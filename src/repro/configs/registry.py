@@ -3,7 +3,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, Tuple
+from typing import Dict
 
 from .base import ModelConfig
 

@@ -1,7 +1,7 @@
 """repro.core — RDMAbox's contribution: load-aware batching, admission
 control, adaptive polling, and the node-level remote-memory abstraction."""
 
-from .admission import AdmissionController, AdmissionHook
+from .admission import AdmissionController, AdmissionHook, CongestionAwareHook
 from .batching import BatchPolicy, plan, resolve_reg_mode
 from .channel import Channel, ChannelSet
 from .completion import CompletionQueue
@@ -23,7 +23,8 @@ from .rdmabox import BoxConfig, RDMABox, TransferError, TransferFuture
 from .region import RegionDirectory, RemoteRegion
 
 __all__ = [
-    "AdmissionController", "AdmissionHook", "BatchPolicy", "plan",
+    "AdmissionController", "AdmissionHook", "CongestionAwareHook",
+    "BatchPolicy", "plan",
     "resolve_reg_mode", "Channel", "ChannelSet", "CompletionQueue",
     "PAGE_SIZE", "RegMode", "TransferDescriptor", "Verb", "WCStatus",
     "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",

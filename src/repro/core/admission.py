@@ -4,7 +4,11 @@ A window-based in-flight-bytes limiter implemented *on* the merge queue —
 no extra queueing layer. While the window is full, posting threads block;
 their requests keep sitting in the merge queue, where waiting is productive
 (more neighbours arrive ⇒ bigger merges). ``AdmissionHook`` is the paper's
-extension point for plugging real congestion-control policies.
+extension point for plugging real congestion-control policies;
+``CongestionAwareHook`` is the NP-RDMA-style instantiation: multiplicative
+window decrease when observed completion latency inflates over the path's
+base latency (a congested or straggling donor holds completions longer),
+multiplicative recovery once the episode ends.
 """
 
 from __future__ import annotations
@@ -12,7 +16,7 @@ from __future__ import annotations
 import threading
 from typing import Optional
 
-from .descriptors import AtomicCounter
+from .descriptors import PAGE_SIZE, AtomicCounter, WCStatus, WorkCompletion
 
 
 class AdmissionHook:
@@ -20,6 +24,102 @@ class AdmissionHook:
 
     def window_bytes(self, current_window: int) -> int:
         return current_window
+
+    def observe(self, wc: WorkCompletion) -> None:
+        """Called once per completion the engine sees (success or error);
+        policies that react to measured path state override this."""
+
+
+class CongestionAwareHook(AdmissionHook):
+    """AIMD-style window scaling driven by observed completion latency.
+
+    The hook self-calibrates a base latency: the running minimum of the
+    latency *EWMA* from the ``calibration``-th completion on. Minimizing
+    over the EWMA (not raw samples) tracks the path's loaded steady state
+    — queueing behind a full admission window inflates latency even on a
+    healthy path, and that must not read as congestion, while a single
+    unloaded-fast completion must not set an unreachably low bar. The
+    hook keeps a window *fraction* in ``[min_fraction, 1.0]``:
+
+    * EWMA > ``latency_factor`` x base  ⇒  fraction *= ``shrink``
+      (congested path: fewer in-flight bytes, the merge queue keeps
+      merging behind the smaller window),
+    * otherwise                         ⇒  fraction *= ``grow``
+      (episode over: multiplicative re-expansion up to the full window).
+
+    Adjustments happen at most once per ``adjust_every`` observations so
+    one burst of late completions cannot slam the window to the floor.
+    """
+
+    def __init__(self, shrink: float = 0.5, grow: float = 1.5,
+                 latency_factor: float = 3.0, min_fraction: float = 1 / 32,
+                 ewma_alpha: float = 0.25, adjust_every: int = 8,
+                 calibration: int = 24) -> None:
+        assert 0.0 < shrink < 1.0 < grow
+        self.shrink = shrink
+        self.grow = grow
+        self.latency_factor = latency_factor
+        self.min_fraction = min_fraction
+        self.ewma_alpha = ewma_alpha
+        self.adjust_every = adjust_every
+        self.calibration = calibration
+        self._lock = threading.Lock()
+        self._fraction = 1.0
+        self._base_us: Optional[float] = None
+        self._ewma_us: Optional[float] = None
+        self._observations = 0
+        self._since_adjust = 0
+        self.shrinks = AtomicCounter()
+        self.grows = AtomicCounter()
+
+    def observe(self, wc: WorkCompletion) -> None:
+        if wc.status is not WCStatus.SUCCESS:
+            return                      # error latencies are not path signal
+        lat = wc.latency_us
+        if lat <= 0.0:
+            return
+        with self._lock:
+            self._observations += 1
+            a = self.ewma_alpha
+            self._ewma_us = lat if self._ewma_us is None \
+                else a * lat + (1.0 - a) * self._ewma_us
+            if self._observations <= self.calibration \
+                    or self._base_us is None:    # calibration=0 configs
+                self._base_us = self._ewma_us    # loaded steady-state est.
+                if self._observations <= self.calibration:
+                    return
+            self._base_us = min(self._base_us, self._ewma_us)
+            self._since_adjust += 1
+            if self._since_adjust < self.adjust_every:
+                return
+            self._since_adjust = 0
+            if self._ewma_us > self.latency_factor * self._base_us:
+                new = max(self.min_fraction, self._fraction * self.shrink)
+                if new < self._fraction:
+                    self.shrinks.add()
+                self._fraction = new
+            elif self._fraction < 1.0:
+                self._fraction = min(1.0, self._fraction * self.grow)
+                self.grows.add()
+
+    def window_bytes(self, current_window: int) -> int:
+        with self._lock:
+            return max(PAGE_SIZE, int(current_window * self._fraction))
+
+    @property
+    def window_fraction(self) -> float:
+        with self._lock:
+            return self._fraction
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "window_fraction": self._fraction,
+                "base_latency_us": self._base_us,
+                "ewma_latency_us": self._ewma_us,
+                "shrinks": self.shrinks.value,
+                "grows": self.grows.value,
+            }
 
 
 class AdmissionController:
@@ -36,6 +136,13 @@ class AdmissionController:
     def in_flight_bytes(self) -> int:
         with self._cv:
             return self._in_flight
+
+    @property
+    def current_limit(self) -> Optional[int]:
+        """The effective window after the hook's policy (None = unlimited)."""
+        if self.window_bytes is None:
+            return None
+        return self.hook.window_bytes(self.window_bytes)
 
     def try_acquire(self, nbytes: int) -> bool:
         """Non-blocking reserve; used by the merge path to decide to wait."""

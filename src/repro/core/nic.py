@@ -27,10 +27,11 @@ WQEs, cache misses, completions) are exact and deterministic.
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 from .completion import CompletionQueue
 from .descriptors import (
@@ -43,6 +44,12 @@ from .descriptors import (
     WorkCompletion,
 )
 from .region import RegionDirectory
+
+# donor-side service constants: a WRITE-with-imm-style ack is one small
+# message on the wire; the DRR quantum is how many bytes one client may be
+# served per round before the donor rotates to the next attached client
+ACK_BYTES = 64
+DRR_QUANTUM_BYTES = 16 * PAGE_SIZE
 
 
 @dataclass
@@ -123,6 +130,8 @@ class NICStats:
     bytes_on_wire: AtomicCounter = field(default_factory=AtomicCounter)
     memcpy_pages: AtomicCounter = field(default_factory=AtomicCounter)
     registrations: AtomicCounter = field(default_factory=AtomicCounter)
+    served_wqes: AtomicCounter = field(default_factory=AtomicCounter)
+    acks_sent: AtomicCounter = field(default_factory=AtomicCounter)
 
     def snapshot(self) -> Dict[str, int]:
         return {
@@ -136,6 +145,8 @@ class NICStats:
             "bytes_on_wire": self.bytes_on_wire.value,
             "memcpy_pages": self.memcpy_pages.value,
             "registrations": self.registrations.value,
+            "served_wqes": self.served_wqes.value,
+            "acks_sent": self.acks_sent.value,
         }
 
 
@@ -156,8 +167,33 @@ class QueuePair:
         self.pu_index = self.qp_id % nic.cost.num_pus
 
 
+@dataclass
+class _DonorJob:
+    """One transfer handed off to the destination node's NIC for service.
+
+    The client NIC paid the forward leg (poster, PU, egress wire, link);
+    the donor pays ingress processing + region bandwidth, moves the bytes,
+    and acks back over its *own* egress wire and the reverse link — so a
+    slow or congested donor back-pressures every client attached to it.
+    """
+
+    desc: TransferDescriptor
+    cq: CompletionQueue
+    src_node: int                 # the requesting client
+    status: WCStatus
+    post_v: float
+    post_r: float
+    fwd_complete_v: float         # forward-leg virtual completion stamp
+    fwd_delay_real: float         # forward propagation delay (REAL seconds)
+
+
 class SimulatedNIC:
-    """One node's NIC: PU worker threads + shared wire + WQE cache model."""
+    """One node's NIC: PU worker threads + shared wire + WQE cache model.
+
+    When the NIC belongs to a fabric it also *serves* inbound transfers:
+    clients hand descriptors to the destination NIC, which services them
+    with deficit-round-robin fairness across requesting clients (see
+    ``_DonorJob``)."""
 
     def __init__(
         self,
@@ -190,6 +226,16 @@ class SimulatedNIC:
         self._started = False
         self._start_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
+        # donor-side service: per-client job queues drained by one lazily
+        # started thread with deficit-round-robin fairness
+        self._serve_cv = threading.Condition()
+        self._serve_queues: Dict[int, Deque[_DonorJob]] = {}
+        self._serve_order: List[int] = []
+        self._serve_deficit: Dict[int, int] = {}
+        self._serve_idx = 0
+        self._serve_pu = 0
+        self._served: Dict[int, List[int]] = {}    # client -> [ops, bytes]
+        self._serve_thread: Optional[threading.Thread] = None
 
     def _ensure_started(self) -> None:
         """PU worker threads spawn on first post — a fabric full of idle
@@ -254,13 +300,21 @@ class SimulatedNIC:
                 self._pu_queues[pu].append((qp, d, post_v, post_r))
             self._pu_cv[pu].notify()
 
+    @property
+    def is_open(self) -> bool:
+        return self._running
+
     def close(self) -> None:
         self._running = False
         for cv in self._pu_cv:
             with cv:
                 cv.notify_all()
+        with self._serve_cv:
+            self._serve_cv.notify_all()
         for t in self._threads:
             t.join(timeout=2.0)
+        if self._serve_thread is not None:
+            self._serve_thread.join(timeout=2.0)
 
     # ---- NIC processing units --------------------------------------------
     def _pu_loop(self, pu: int) -> None:
@@ -306,6 +360,26 @@ class SimulatedNIC:
         else:
             complete_v = self._wire.charge(wire_us * mult)
         self.stats.bytes_on_wire.add(desc.nbytes)
+        # When the destination node has its own NIC in the fabric, the
+        # transfer is *served* there: the donor moves the bytes and acks
+        # back through its own egress + reverse link. Transport-generated
+        # errors (peer unreachable) still complete client-side — a dead
+        # donor cannot send acks.
+        donor_nic = None
+        if self._fabric is not None and desc.dest_node != self.node_id \
+                and status is not WCStatus.RETRY_EXC_ERR:
+            donor_nic = self._fabric.nic_or_none(desc.dest_node)
+        if donor_nic is not None:
+            # serve_transfer itself fails the job (RETRY_EXC_ERR) when the
+            # donor NIC is closed — checked under its lock, so a close
+            # racing this handoff can't silently succeed OR hang
+            self._outstanding.add(-1)
+            donor_nic.serve_transfer(_DonorJob(
+                desc=desc, cq=qp.cq, src_node=self.node_id,
+                status=status or WCStatus.SUCCESS,
+                post_v=post_v, post_r=post_r,
+                fwd_complete_v=complete_v, fwd_delay_real=delay_real))
+            return
         if status is None:
             status = WCStatus.SUCCESS
             try:
@@ -353,3 +427,169 @@ class SimulatedNIC:
                     req.payload[...] = data.reshape(req.payload.shape)
                 else:
                     req.payload = data
+
+    # ---- donor-side service (fabric mode) --------------------------------
+    def serve_transfer(self, job: _DonorJob) -> None:
+        """Enqueue an inbound transfer for service by this node's NIC.
+
+        Called by the *requesting* client's NIC. Jobs queue per client and
+        are drained by one service thread with deficit-round-robin
+        fairness, so no attached client can starve the others. A closed
+        NIC fails the job immediately (RETRY_EXC_ERR, as if the peer died)
+        instead of leaving the client's future hanging."""
+        with self._serve_cv:
+            if self._running:
+                if self._serve_thread is None:
+                    self._serve_thread = threading.Thread(
+                        target=self._serve_loop, daemon=True,
+                        name=f"nic{self.node_id}-serve")
+                    self._serve_thread.start()
+                q = self._serve_queues.get(job.src_node)
+                if q is None:
+                    q = collections.deque()
+                    self._serve_queues[job.src_node] = q
+                    self._serve_order.append(job.src_node)
+                    self._serve_deficit[job.src_node] = 0
+                q.append(job)
+                self._serve_cv.notify()
+                return
+        self._fail_job(job)         # closed NIC: fail, don't hang the client
+
+    def _fail_job(self, job: _DonorJob) -> None:
+        """Complete a job the donor cannot serve with an error WC — the
+        transport-level outcome of a peer that went away mid-transfer."""
+        status = job.status if job.status is not WCStatus.SUCCESS \
+            else WCStatus.RETRY_EXC_ERR
+        wc = WorkCompletion(
+            wr_id=job.desc.requests[0].wr_id if job.desc.requests else -1,
+            verb=job.desc.verb,
+            dest_node=job.desc.dest_node,
+            nbytes=job.desc.nbytes,
+            status=status,
+            post_vtime_us=job.post_v,
+            complete_vtime_us=job.fwd_complete_v,
+            post_rtime=job.post_r,
+            complete_rtime=time.perf_counter(),
+            requests=job.desc.requests,
+        )
+        client_nic = (self._fabric.nic_or_none(job.src_node)
+                      if self._fabric is not None else None)
+        stats = client_nic.stats if client_nic is not None else self.stats
+        stats.completions.add(1)
+        stats.wc_errors.add(1)
+        job.cq.post(wc)
+
+    def _serve_loop(self) -> None:
+        while True:
+            with self._serve_cv:
+                while self._running and \
+                        not any(self._serve_queues.values()):
+                    self._serve_cv.wait(timeout=0.1)
+                if not self._running:
+                    # fail whatever is still queued — never drop silently
+                    leftover = [j for q in self._serve_queues.values()
+                                for j in q]
+                    for q in self._serve_queues.values():
+                        q.clear()
+                else:
+                    leftover = None
+                    job = self._next_job_locked()
+            if leftover is not None:
+                for j in leftover:
+                    self._fail_job(j)
+                return
+            if job is not None:
+                self._serve_job(job)
+
+    def _next_job_locked(self) -> Optional[_DonorJob]:
+        """Deficit-round-robin pick across attached clients (lock held).
+
+        Each visit tops a lagging client's deficit up by one quantum, so
+        per rotation every backlogged client is served ~quantum bytes
+        regardless of how fast it posts or how big its WQEs are. May
+        return None while a jumbo WQE is still accumulating deficit."""
+        n = len(self._serve_order)
+        for _ in range(n):
+            client = self._serve_order[self._serve_idx % n]
+            q = self._serve_queues[client]
+            if not q:
+                self._serve_idx += 1
+                continue
+            need = q[0].desc.nbytes
+            if self._serve_deficit[client] < need:
+                self._serve_deficit[client] += DRR_QUANTUM_BYTES
+            if self._serve_deficit[client] < need:
+                self._serve_idx += 1        # keep banking, try next client
+                continue
+            job = q.popleft()
+            self._serve_deficit[client] -= job.desc.nbytes
+            served = self._served.setdefault(client, [0, 0])
+            served[0] += 1
+            served[1] += job.desc.nbytes
+            if not q:
+                self._serve_deficit[client] = 0    # idle flows bank nothing
+                self._serve_idx += 1
+            elif self._serve_deficit[client] < q[0].desc.nbytes:
+                self._serve_idx += 1
+            return job
+        return None
+
+    def _serve_job(self, job: _DonorJob) -> None:
+        """Service one inbound transfer: ingress PU + region bandwidth,
+        the actual byte movement, then a WRITE-with-imm-style ack through
+        this node's egress wire and the reverse link."""
+        cost = self.cost
+        desc = job.desc
+        faults = self._fabric.faults
+        mult = faults.serve_multiplier(self.node_id, job.src_node)
+        # ingress processing + donor-region bandwidth: these pacers are
+        # shared across every attached client — the contention point
+        self._serve_pu = (self._serve_pu + 1) % cost.num_pus
+        self._pu_pacers[self._serve_pu].charge(cost.wqe_proc_us * mult)
+        self._wire.charge(desc.num_pages * cost.wire_us_per_page * mult)
+        self.stats.served_wqes.add(1)
+        status = job.status
+        if status is WCStatus.SUCCESS:
+            try:
+                self._move_data(desc)
+            except Exception:
+                status = WCStatus.REMOTE_ERR
+        # ack leg: donor egress + reverse link back to the client
+        link = self._fabric.link(self.node_id, job.src_node)
+        ack_v, ack_delay = link.transmit(
+            self._wire, cost.completion_dma_us, 0, ACK_BYTES,
+            fault_mult=mult)
+        self.stats.acks_sent.add(1)
+        self.stats.bytes_on_wire.add(ACK_BYTES)
+        wc = WorkCompletion(
+            wr_id=desc.requests[0].wr_id if desc.requests else -1,
+            verb=desc.verb,
+            dest_node=desc.dest_node,
+            nbytes=desc.nbytes,
+            status=status,
+            post_vtime_us=job.post_v,
+            complete_vtime_us=max(ack_v, job.fwd_complete_v),
+            post_rtime=job.post_r,
+            complete_rtime=time.perf_counter(),
+            requests=desc.requests,
+        )
+        # completion accounting stays with the *client's* NIC — it is the
+        # one whose CQ receives the CQE
+        client_nic = self._fabric.nic_or_none(job.src_node)
+        stats = client_nic.stats if client_nic is not None else self.stats
+        stats.completions.add(1)
+        if status is not WCStatus.SUCCESS:
+            stats.wc_errors.add(1)
+        total_delay = job.fwd_delay_real + ack_delay
+        if total_delay > 0.0:
+            self._fabric.delay.post_at(time.perf_counter() + total_delay,
+                                       job.cq, wc)
+        else:
+            job.cq.post(wc)
+
+    def fairness_snapshot(self) -> Dict[int, Dict[str, int]]:
+        """Per-client donor-side service accounting (empty for NICs that
+        never served inbound traffic)."""
+        with self._serve_cv:
+            return {c: {"ops": v[0], "bytes": v[1]}
+                    for c, v in self._served.items()}

@@ -25,6 +25,12 @@ Failover (exercised by ``repro.fabric`` fault injection):
   persisted to disk so it is never silently lost.
 * **eviction** — ``evict_after`` consecutive strikes marks a donor
   failed (no further traffic); a later ``recover_node`` clears it.
+* **write buffer** — a page with swap-out writes still in flight is
+  served from the in-memory write buffer (Linux swap-cache semantics).
+  RDMA orders operations only within one QP, and the engine stripes a
+  page's write and a later read across channels/QPs — without the
+  buffer, an async swap-out racing its own swap-in could read stale
+  donor bytes. Entries release when every replica write has completed.
 """
 
 from __future__ import annotations
@@ -36,7 +42,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .descriptors import PAGE_SIZE, AtomicCounter
-from .rdmabox import RDMABox, TransferError, TransferFuture
+from .rdmabox import RDMABox, TransferFuture
 
 
 class DiskTier:
@@ -73,14 +79,28 @@ class RemotePagingSystem:
         write_through_disk: bool = False,
         first_responder: bool = False,
         evict_after: int = 3,
+        region_base: int = 0,
+        region_pages: Optional[int] = None,
     ) -> None:
+        """``region_base``/``region_pages`` carve this paging system's slice
+        out of each donor's region. Multiple clients sharing donors MUST use
+        disjoint slices — placement is a pure function of page_id, so two
+        clients with the same slice would overwrite each other's pages."""
         self.box = box
         self.donors = list(box.peers)
         self.n = len(self.donors)
         self.r = min(replication, self.n)
         self.stripe = stripe_pages
         self.donor_pages = donor_pages
-        self.replica_region = donor_pages // max(1, self.r)
+        self.region_base = region_base
+        self.region_pages = region_pages if region_pages is not None \
+            else donor_pages - region_base
+        if region_base + self.region_pages > donor_pages:
+            raise ValueError(
+                f"region slice [{region_base}, "
+                f"{region_base + self.region_pages}) exceeds donor region "
+                f"of {donor_pages} pages")
+        self.replica_region = self.region_pages // max(1, self.r)
         self.disk = disk or DiskTier()
         self.write_through_disk = write_through_disk
         self.first_responder = first_responder
@@ -92,12 +112,19 @@ class RemotePagingSystem:
         # later write to it succeeds. Only the acked (wait=True) write path
         # can observe failures, so only it maintains this.
         self._stale: set[Tuple[int, int]] = set()
+        # in-flight swap-outs: page_id -> [newest bytes, writes outstanding
+        # across ALL overlapping swap-outs, racing?]. ``racing`` marks a
+        # page whose writes were posted concurrently (different QPs can
+        # reorder them at the donor): once the count drains, the newest
+        # bytes are re-issued so the donor provably converges to them.
+        self._wb: Dict[int, list] = {}
         self._lock = threading.Lock()
         self.capacity_pages = (self.replica_region // self.stripe) * self.n * self.stripe
         # failover telemetry (swap APIs are called from many threads)
         self.read_failovers = AtomicCounter()   # reads not served by primary
         self.write_failures = AtomicCounter()   # replica writes that errored
         self.disk_fallback_reads = AtomicCounter()
+        self.write_buffer_hits = AtomicCounter()  # reads served in-flight
         self.evictions = 0                      # guarded by self._lock
 
     # ---- placement ---------------------------------------------------------
@@ -109,7 +136,8 @@ class RemotePagingSystem:
         out = []
         for k in range(self.r):
             donor = self.donors[(g + k) % self.n]
-            remote = k * self.replica_region + (g // self.n) * self.stripe + off
+            remote = (self.region_base + k * self.replica_region
+                      + (g // self.n) * self.stripe + off)
             out.append((donor, remote))
         return out
 
@@ -143,6 +171,67 @@ class RemotePagingSystem:
         with self._lock:
             self._strikes.pop(node, None)
 
+    # ---- in-flight write buffer -------------------------------------------
+    def _wb_register(self, page_id: int, buf, n_writes: int):
+        """Pin the page's bytes while its replica writes are in flight;
+        returns the per-write completion callback that unpins it.
+
+        Overlapping swap-outs of the same page accumulate one shared
+        outstanding count (the entry lives until EVERY write has
+        completed) and mark the page *racing*: the writes rode different
+        QPs and may land at the donor in either order, so when the count
+        drains the newest bytes are written once more — posted after all
+        others completed, nothing can reorder past it."""
+        if n_writes <= 0:
+            return None
+        with self._lock:
+            entry = self._wb.get(page_id)
+            if entry is None:
+                self._wb[page_id] = [buf.copy(), n_writes, False]
+            else:
+                entry[0] = buf.copy()       # newest bytes win
+                if entry[1] > 0:            # concurrent writes in flight
+                    entry[2] = True         # donor order now ambiguous
+                entry[1] += n_writes        # count 0 = the settling rewrite
+
+        def done(_wc, page_id=page_id) -> None:
+            rewrite = None
+            with self._lock:
+                entry = self._wb.get(page_id)
+                if entry is None:
+                    return
+                entry[1] -= 1
+                if entry[1] > 0:
+                    return
+                if entry[2]:
+                    entry[2] = False        # re-issue settles the race
+                    rewrite = entry[0]
+                else:
+                    del self._wb[page_id]
+            if rewrite is not None:
+                # not inline: this callback runs on a poller thread, and
+                # swap_out can block on the admission window — which only
+                # drains through poller threads
+                t = threading.Timer(0.0, self.swap_out, args=(page_id, rewrite))
+                t.daemon = True
+                t.start()
+
+        return done
+
+    def _wb_lookup(self, page_id: int):
+        with self._lock:
+            entry = self._wb.get(page_id)
+            return None if entry is None else entry[0].copy()
+
+    def read_inflight(self, page_id: int) -> Optional[np.ndarray]:
+        """The page's bytes if its swap-out is still in flight, else None.
+        Read paths that bypass ``swap_in`` (prefetch bursts) MUST consult
+        this first, or they can read stale donor bytes."""
+        pending = self._wb_lookup(page_id)
+        if pending is not None:
+            self.write_buffer_hits.add()
+        return pending
+
     # ---- swap API ---------------------------------------------------------
     def swap_out(self, page_id: int, data: np.ndarray,
                  wait: bool = False, timeout: float = 30.0) -> List[TransferFuture]:
@@ -156,7 +245,9 @@ class RemotePagingSystem:
         buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
         assert buf.nbytes == PAGE_SIZE, "swap_out takes exactly one page"
         targets = self.live_replicas(page_id)
-        futs = [self.box.write(donor, remote, buf) for donor, remote in targets]
+        done = self._wb_register(page_id, buf, len(targets))
+        futs = [self.box.write(donor, remote, buf, callback=done)
+                for donor, remote in targets]
         on_disk = self.write_through_disk or not futs
         if on_disk:
             self.disk.write(page_id, buf)
@@ -176,7 +267,9 @@ class RemotePagingSystem:
             buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
             assert buf.nbytes == PAGE_SIZE, "swap_out_batch takes whole pages"
             targets = self.live_replicas(page_id)
-            futs = [self.box.write(d, a, buf) for d, a in targets]
+            done = self._wb_register(page_id, buf, len(targets))
+            futs = [self.box.write(d, a, buf, callback=done)
+                    for d, a in targets]
             on_disk = self.write_through_disk or not futs
             if on_disk:
                 self.disk.write(page_id, buf)
@@ -214,6 +307,9 @@ class RemotePagingSystem:
         primary replica — whether the primary errored live, held stale
         data from a failed write, or its donor was already evicted.
         """
+        pending = self.read_inflight(page_id)
+        if pending is not None:         # swap-out still in flight: serve
+            return pending              # the freshest bytes locally
         with self._lock:
             stale = set(self._stale)
         reps = [(k, d, a) for k, (d, a) in enumerate(self.replicas(page_id))
@@ -290,6 +386,7 @@ class RemotePagingSystem:
         return {
             "read_failovers": self.read_failovers.value,
             "write_failures": self.write_failures.value,
+            "write_buffer_hits": self.write_buffer_hits.value,
             "disk_fallback_reads": self.disk_fallback_reads.value,
             "disk_reads": self.disk.reads,
             "disk_writes": self.disk.writes,

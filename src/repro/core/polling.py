@@ -29,7 +29,7 @@ import enum
 import threading
 import time
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 from .completion import CompletionQueue
 from .descriptors import AtomicCounter, WCStatus, WorkCompletion

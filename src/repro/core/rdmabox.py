@@ -25,6 +25,7 @@ from .batching import BatchPolicy, plan
 from .channel import ChannelSet
 from .descriptors import (
     PAGE_SIZE,
+    AtomicCounter,
     RegMode,
     Verb,
     WCStatus,
@@ -32,7 +33,7 @@ from .descriptors import (
     WorkRequest,
 )
 from .merge_queue import MergeQueue
-from .nic import NICCostModel, SimulatedNIC
+from .nic import NICCostModel
 from .polling import Poller, PollConfig, PollMode
 from .region import RegionDirectory
 
@@ -111,6 +112,14 @@ class BoxConfig:
     nic_cost: NICCostModel = field(default_factory=NICCostModel)
     nic_scale: float = 1e-6
     app_handler: Optional[Callable[[WorkCompletion], None]] = None
+    # admission policy plugged into the window (e.g. CongestionAwareHook);
+    # None keeps the paper prototype's static window
+    admission_hook: Optional[AdmissionHook] = None
+    # bounded in-engine retry for transient RNR completions: a request is
+    # resubmitted through the merge queue (with exponential backoff) up to
+    # this many times before the error surfaces to the caller / paging
+    rnr_retry_limit: int = 3
+    rnr_backoff_us: float = 200.0               # virtual us, doubles per try
 
 
 class RDMABox:
@@ -148,9 +157,13 @@ class RDMABox:
             channels_per_peer=self.cfg.channels_per_peer,
             shared_cqs=scq,
         )
-        self.admission = AdmissionController(self.cfg.window_bytes)
+        self.admission = AdmissionController(self.cfg.window_bytes,
+                                             hook=self.cfg.admission_hook)
         self._futures: Dict[int, TransferFuture] = {}
         self._futures_lock = threading.Lock()
+        self._retries: Dict[int, int] = {}      # wr_id -> RNR attempts so far
+        self.rnr_retries = AtomicCounter()
+        self._closed = False
         # one merge queue per verb, as in the paper
         self._queues = {
             Verb.READ: MergeQueue(self._make_poster(), self.admission,
@@ -165,13 +178,18 @@ class RDMABox:
 
     # ---- public API --------------------------------------------------------
     def write(self, dest_node: int, page: int, data: np.ndarray,
-              num_pages: Optional[int] = None) -> TransferFuture:
+              num_pages: Optional[int] = None,
+              callback: Optional[Callable[[WorkCompletion], None]] = None,
+              ) -> TransferFuture:
         n = num_pages or max(1, data.nbytes // PAGE_SIZE)
-        return self._submit(Verb.WRITE, dest_node, page, n, data)
+        return self._submit(Verb.WRITE, dest_node, page, n, data, callback)
 
     def read(self, dest_node: int, page: int, num_pages: int,
-             out: Optional[np.ndarray] = None) -> TransferFuture:
-        return self._submit(Verb.READ, dest_node, page, num_pages, out)
+             out: Optional[np.ndarray] = None,
+             callback: Optional[Callable[[WorkCompletion], None]] = None,
+             ) -> TransferFuture:
+        return self._submit(Verb.READ, dest_node, page, num_pages, out,
+                            callback)
 
     def flush(self, timeout: float = 30.0) -> None:
         """Wait until every submitted transfer has completed."""
@@ -184,6 +202,7 @@ class RDMABox:
         raise TimeoutError("flush timed out with transfers in flight")
 
     def close(self) -> None:
+        self._closed = True
         self.poller.stop()
         self.channels.close()
         self.nic.close()
@@ -192,25 +211,32 @@ class RDMABox:
 
     def stats(self) -> Dict[str, object]:
         qr, qw = self._queues[Verb.READ], self._queues[Verb.WRITE]
-        return {
+        out = {
             "nic": self.nic.stats.snapshot(),
             "faults": self.fabric.faults.snapshot(),
             "poll": self.poller.stats.snapshot(),
             "admission_blocked": self.admission.blocked_count.value,
+            "admission_limit": self.admission.current_limit,
             "in_flight_bytes": self.admission.in_flight_bytes,
+            "rnr_retries": self.rnr_retries.value,
             "merge": {
                 "submitted": qr.submitted.value + qw.submitted.value,
                 "drains": qr.drains.value + qw.drains.value,
                 "solo_posts": qr.solo_posts.value + qw.solo_posts.value,
             },
         }
+        hook = self.admission.hook
+        if hasattr(hook, "snapshot"):
+            out["admission_hook"] = hook.snapshot()
+        return out
 
     # ---- engine internals ----------------------------------------------------
     def _submit(self, verb: Verb, dest: int, page: int, num_pages: int,
-                payload) -> TransferFuture:
+                payload, callback=None) -> TransferFuture:
         wr = WorkRequest(verb=verb, dest_node=dest, remote_addr=page,
                          num_pages=num_pages, payload=payload,
-                         enqueue_time=time.perf_counter())
+                         enqueue_time=time.perf_counter(),
+                         callback=callback)
         fut = TransferFuture()
         with self._futures_lock:
             self._futures[wr.wr_id] = fut
@@ -239,12 +265,59 @@ class RDMABox:
 
     def _on_completion(self, wc: WorkCompletion) -> None:
         self.admission.release(wc.nbytes)
+        self.admission.hook.observe(wc)
         if self.cfg.app_handler is not None:
             self.cfg.app_handler(wc)
+        retried_ids = self._maybe_retry(wc)
         with self._futures_lock:
-            futs = [self._futures.pop(r.wr_id, None) for r in wc.requests]
+            futs = []
+            for r in wc.requests:
+                if r.wr_id in retried_ids:
+                    futs.append(None)           # still in flight: retrying
+                    continue
+                self._retries.pop(r.wr_id, None)
+                futs.append(self._futures.pop(r.wr_id, None))
         for r, fut in zip(wc.requests, futs):
+            if r.wr_id in retried_ids:
+                continue
+            # callback BEFORE the future resolves: a thread released by
+            # fut.wait() must observe the callback's bookkeeping (e.g. the
+            # paging write-buffer release) as already done. A raising
+            # callback must not take down the poller thread with it.
+            if r.callback is not None:
+                try:
+                    r.callback(wc)
+                except Exception:
+                    pass
             if fut is not None:
                 fut.set(wc)
-            if r.callback is not None:
-                r.callback(wc)
+
+    def _maybe_retry(self, wc: WorkCompletion) -> set:
+        """Bounded in-engine retry for transient (RNR) completions: each
+        request rides the merge queue again after exponential backoff.
+        Returns the wr_ids being retried (their futures stay pending)."""
+        if wc.status is not WCStatus.RNR_RETRY_ERR \
+                or self.cfg.rnr_retry_limit <= 0 or self._closed:
+            return set()
+        retried: List[tuple] = []
+        with self._futures_lock:
+            for r in wc.requests:
+                attempt = self._retries.get(r.wr_id, 0)
+                if attempt < self.cfg.rnr_retry_limit \
+                        and r.wr_id in self._futures:
+                    self._retries[r.wr_id] = attempt + 1
+                    retried.append((r, attempt + 1))
+        for r, attempt in retried:
+            self.rnr_retries.add()
+            delay = (self.cfg.rnr_backoff_us * self.cfg.nic_scale
+                     * (2 ** (attempt - 1)))
+            timer = threading.Timer(delay, self._resubmit, args=(r,))
+            timer.daemon = True
+            timer.start()
+        return {r.wr_id for r, _ in retried}
+
+    def _resubmit(self, wr: WorkRequest) -> None:
+        if self._closed:
+            return
+        wr.enqueue_time = time.perf_counter()
+        self._queues[wr.verb].submit(wr)

@@ -93,6 +93,13 @@ class Fabric:
                                f"(have {sorted(self._nics)})")
             return self._nics[node_id]
 
+    def nic_or_none(self, node_id: int) -> Optional[SimulatedNIC]:
+        """The node's NIC, or None when the node has no NIC in this fabric
+        (legacy directories register bare regions without a serving node —
+        those transfers complete client-side)."""
+        with self._lock:
+            return self._nics.get(node_id)
+
     def nodes(self) -> List[int]:
         with self._lock:
             return sorted(self._nics)
@@ -125,12 +132,26 @@ class Fabric:
     def recover(self, node: int) -> None:
         self.faults.recover_node(node)
 
+    def congest(self, src: int, dst: int, factor: float,
+                until_us: Optional[float] = None) -> None:
+        """Imperative congestion episode on one directed link (mid-run)."""
+        self.faults.congest_link(src, dst, factor, until_us=until_us)
+
+    def clear_congestion(self, src: int, dst: int) -> None:
+        self.faults.clear_congestion(src, dst)
+
     # ---- lifecycle ---------------------------------------------------------
     def stats(self) -> Dict[str, object]:
         with self._lock:
             nics = {n: nic.stats.snapshot() for n, nic in self._nics.items()}
+            service = {}
+            for n, nic in self._nics.items():
+                fs = nic.fairness_snapshot()
+                if fs:
+                    service[n] = fs
             links = [ln.snapshot() for ln in self._links.values()]
-        return {"nics": nics, "links": links, "faults": self.faults.snapshot()}
+        return {"nics": nics, "links": links, "service": service,
+                "faults": self.faults.snapshot()}
 
     def close(self) -> None:
         with self._lock:

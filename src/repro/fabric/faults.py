@@ -50,6 +50,7 @@ class FaultEvent:
     prob: float = 0.0                     # flaky probability per transfer
     status: WCStatus = WCStatus.RNR_RETRY_ERR
     max_errors: Optional[int] = None      # flaky: cap injected errors
+    until_us: Optional[float] = None      # congest: episode end (virtual time)
 
 
 class FaultPlan:
@@ -82,9 +83,14 @@ class FaultPlan:
         return self
 
     def congest(self, src: int, dst: int, factor: float,
-                after_ops: int = 0) -> "FaultPlan":
+                after_ops: int = 0,
+                until_us: Optional[float] = None) -> "FaultPlan":
+        """Congest one directed link; ``until_us`` bounds the episode — the
+        multiplier lifts once virtual time passes it (congestion-aware
+        admission should then re-expand its window)."""
         self.events.append(FaultEvent(FaultKind.CONGEST, src=src, dst=dst,
-                                      factor=factor, after_ops=after_ops))
+                                      factor=factor, after_ops=after_ops,
+                                      until_us=until_us))
         return self
 
 
@@ -101,6 +107,7 @@ class FaultState:
         self._crashed: set[int] = set()
         self._slow: Dict[int, float] = {}
         self._congest: Dict[Tuple[int, int], float] = {}
+        self._congest_until: Dict[Tuple[int, int], Optional[float]] = {}
         self._flaky_budget: Dict[int, Optional[int]] = {}
         # private copies: arming mutates events, and one FaultPlan may be
         # reused to build several fabrics (e.g. re-run bench scenarios)
@@ -135,6 +142,7 @@ class FaultState:
                 self._slow[ev.node] = ev.factor
             elif ev.kind == FaultKind.CONGEST:
                 self._congest[(ev.src, ev.dst)] = ev.factor
+                self._congest_until[(ev.src, ev.dst)] = ev.until_us
             elif ev.kind == FaultKind.FLAKY:
                 self._flaky_budget[ev.node] = ev.max_errors
                 still.append(ev)            # flaky stays live once armed
@@ -166,10 +174,29 @@ class FaultState:
                     return ev.status
         return None
 
+    def _congest_factor(self, key: Tuple[int, int]) -> float:
+        """Congestion multiplier for one directed pair, expiring bounded
+        episodes (lock held)."""
+        until = self._congest_until.get(key)
+        if until is not None and self._now_us() >= until:
+            self._congest.pop(key, None)
+            self._congest_until.pop(key, None)
+            return 1.0
+        return self._congest.get(key, 1.0)
+
     def wire_multiplier(self, src: int, dst: int) -> float:
         with self._lock:
             self._arm()
-            return self._slow.get(dst, 1.0) * self._congest.get((src, dst), 1.0)
+            return self._slow.get(dst, 1.0) * self._congest_factor((src, dst))
+
+    def serve_multiplier(self, donor: int, client: int) -> float:
+        """Multiplier for the donor-side leg of a transfer: the donor's own
+        slowness (a straggler serves and acks slowly) times congestion on
+        the reverse ``donor → client`` path the ack travels."""
+        with self._lock:
+            self._arm()
+            return (self._slow.get(donor, 1.0)
+                    * self._congest_factor((donor, client)))
 
     # ---- imperative control (test choreography) ----------------------------
     def crash_node(self, node: int) -> None:
@@ -180,6 +207,18 @@ class FaultState:
         with self._lock:
             self._crashed.discard(node)
             self._slow.pop(node, None)
+
+    def congest_link(self, src: int, dst: int, factor: float,
+                     until_us: Optional[float] = None) -> None:
+        """Imperative congestion episode on one directed link."""
+        with self._lock:
+            self._congest[(src, dst)] = factor
+            self._congest_until[(src, dst)] = until_us
+
+    def clear_congestion(self, src: int, dst: int) -> None:
+        with self._lock:
+            self._congest.pop((src, dst), None)
+            self._congest_until.pop((src, dst), None)
 
     def is_crashed(self, node: int) -> bool:
         with self._lock:

@@ -71,6 +71,10 @@ class Link:
         self._rng_lock = threading.Lock()
         self.transfers = AtomicCounter()
         self.bytes = AtomicCounter()
+        # zero-page transfers are control messages (donor-side acks): they
+        # pay latency but not per-page serialization — counted separately
+        # so per-link ack traffic is observable
+        self.ctrl_transfers = AtomicCounter()
 
     def transmit(self, egress: Pacer, wire_us: float, num_pages: int,
                  nbytes: int, fault_mult: float = 1.0) -> Tuple[float, float]:
@@ -90,6 +94,8 @@ class Link:
                 lat += self._rng.uniform(0.0, self.cfg.jitter_us) * mult
         self.transfers.add()
         self.bytes.add(nbytes)
+        if num_pages == 0:
+            self.ctrl_transfers.add()
         delay_real = lat * self.scale
         if delay_real < _DELAY_EPS_REAL:
             delay_real = 0.0
@@ -100,6 +106,7 @@ class Link:
             "src": self.src,
             "dst": self.dst,
             "transfers": self.transfers.value,
+            "ctrl_transfers": self.ctrl_transfers.value,
             "bytes": self.bytes.value,
         }
 

@@ -9,7 +9,7 @@ uncoalesced per-page baseline the benchmark compares against.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

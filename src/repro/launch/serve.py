@@ -38,6 +38,10 @@ def main() -> None:
     # fabric topology + degraded-mode scenario surface
     ap.add_argument("--donors", type=int, default=2,
                     help="donor nodes in the remote-memory fabric")
+    ap.add_argument("--clients", type=int, default=1,
+                    help="client endpoints sharing the donor fabric; "
+                         "extra clients run a background paging workload "
+                         "contending with the serving client")
     ap.add_argument("--replication", type=int, default=2)
     ap.add_argument("--link-latency-us", type=float, default=1.0,
                     help="per-link propagation delay (virtual us)")
@@ -49,10 +53,10 @@ def main() -> None:
 
     fabric_flags = (args.straggler is not None or args.link_gbps is not None
                     or args.link_latency_us != 1.0 or args.donors != 2
-                    or args.replication != 2)
+                    or args.replication != 2 or args.clients != 1)
     if fabric_flags and not args.spill:
-        ap.error("fabric flags (--donors/--replication/--link-*/--straggler) "
-                 "only take effect with --spill")
+        ap.error("fabric flags (--donors/--clients/--replication/--link-*/"
+                 "--straggler) only take effect with --spill")
     faults = None
     if args.straggler:
         try:
@@ -110,6 +114,7 @@ def main() -> None:
             cluster = MemoryCluster(
                 num_donors=args.donors, donor_pages=1 << 14,
                 replication=args.replication,
+                num_clients=args.clients,
                 link=LinkConfig(latency_us=args.link_latency_us,
                                 gbps=args.link_gbps),
                 faults=faults)
@@ -149,11 +154,41 @@ def main() -> None:
             for b in range(B):
                 table[b, : len(paged.tables[b])] = paged.tables[b]
             print("page-run coalescing:", descriptor_stats(table, 4))
+            # extra clients contend for the shared donors while the
+            # serving client spills/fetches — the multi-client scenario
+            bg_threads = []
+            bg_rates = {}
+            if args.clients > 1:
+                import threading
+
+                def bg_pager(idx, n_pages=64):
+                    paging = cluster.pagings[idx]
+                    # per-thread generator: np.random.Generator is not
+                    # thread-safe, and these threads run concurrently
+                    r = np.random.default_rng(idx)
+                    buf = r.integers(0, 255, 4096).astype(np.uint8)
+                    t0 = time.perf_counter()
+                    for pid in range(n_pages):
+                        paging.swap_out(pid, buf, wait=True)
+                    bg_rates[idx] = n_pages / (time.perf_counter() - t0)
+
+                bg_threads = [threading.Thread(target=bg_pager, args=(i,))
+                              for i in range(1, args.clients)]
+                for t in bg_threads:
+                    t.start()
             paged.spill_sequence(0, cluster.donors[0])
             paged.fetch_sequence(0, cluster.donors[0])
+            for t in bg_threads:
+                t.join()
             st = cluster.box.stats()
             print(f"spill/fetch: {st['nic']['rdma_ops']} RDMA ops, "
                   f"merge drains {st['merge']['drains']}")
+            if bg_rates:
+                print("background clients (pages/s under contention):",
+                      {cluster.clients[i]: f"{r:,.0f}"
+                       for i, r in sorted(bg_rates.items())})
+                service = cluster.fabric.stats()["service"]
+                print("donor-side per-client service:", service)
             cluster.close()
         print("SERVING DONE")
 

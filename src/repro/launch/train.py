@@ -21,10 +21,8 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import RunConfig, get_config, get_reduced
 from repro.data.pipeline import DataConfig, SyntheticTokens
-from repro.distributed.sharding import (batch_spec, optim_rules, rules_for,
-                                        tree_shardings)
 from repro.launch.mesh import make_local_mesh
-from repro.launch.steps import build_train_step, param_structs
+from repro.launch.steps import build_train_step
 from repro.models import init_stack
 from repro.optim import adamw
 

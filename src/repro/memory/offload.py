@@ -30,11 +30,16 @@ class OffloadConfig:
     eviction) and a page whose every replica write fails is persisted to
     disk instead of being silently lost. ``fetch_timeout`` bounds how
     long a fetch waits on any single replica before failing over.
+    ``fetch_parallel`` posts every page's read before waiting on any of
+    them, so the merge queue sees the whole burst (the swap-in mirror of
+    the bulk swap-out path); pages whose prefetch errors or times out
+    fall back to the serial failover read.
     """
 
     acked_writes: bool = False
     write_timeout: float = 30.0
     fetch_timeout: float = 10.0
+    fetch_parallel: bool = False
 
 
 class OffloadManager:
@@ -97,12 +102,47 @@ class OffloadManager:
     # ---- swap in ----------------------------------------------------------
     def fetch(self, name: str) -> np.ndarray:
         meta = self._meta[name]
-        buf = np.empty(meta["n_pages"] * PAGE_SIZE, np.uint8)
-        for i in range(meta["n_pages"]):
-            buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE] = self.paging.swap_in(
-                meta["base"] + i, timeout=self.cfg.fetch_timeout)
+        n_pages = meta["n_pages"]
+        buf = np.empty(n_pages * PAGE_SIZE, np.uint8)
+        if self.cfg.fetch_parallel:
+            self._fetch_burst(meta["base"], n_pages, buf)
+        else:
+            for i in range(n_pages):
+                buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE] = self.paging.swap_in(
+                    meta["base"] + i, timeout=self.cfg.fetch_timeout)
         raw = buf[: meta["nbytes"]]
         return raw.view(meta["dtype"]).reshape(meta["shape"]).copy()
+
+    def _fetch_burst(self, base: int, n_pages: int, buf: np.ndarray) -> None:
+        """Post all page reads up front (merge-friendly), then resolve;
+        any page whose prefetch fails takes the replica-failover read."""
+        views = [buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE]
+                 for i in range(n_pages)]
+        futs = []
+        for i in range(n_pages):
+            pending = self.paging.read_inflight(base + i)
+            if pending is not None:
+                # swap-out still in flight: the donor may not have the
+                # bytes yet — serve from the paging write buffer
+                views[i][...] = pending
+                futs.append(True)
+                continue
+            try:
+                futs.append(self.paging.prefetch(base + i, views[i]))
+            except RuntimeError:            # no live replica right now
+                futs.append(None)
+        for i, fut in enumerate(futs):
+            if fut is True:                 # already served from the buffer
+                continue
+            ok = False
+            if fut is not None:
+                try:
+                    ok = fut.exception(timeout=self.cfg.fetch_timeout) is None
+                except TimeoutError:
+                    ok = False
+            if not ok:
+                views[i][...] = self.paging.swap_in(
+                    base + i, timeout=self.cfg.fetch_timeout)
 
     # ---- pytree convenience --------------------------------------------------
     def offload_tree(self, prefix: str, tree: PyTree, wait: bool = True) -> None:

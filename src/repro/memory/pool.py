@@ -1,19 +1,30 @@
 """Cluster fixture: the fabric-builder facade.
 
-Mirrors the paper's deployment (§7.1): one client node running the
-workload, N remote peers donating DRAM, replication across donors — now
-built on ``repro.fabric``: every node (client and donors) gets its own
-simulated NIC, node pairs are joined by an explicit link model, and a
-``FaultPlan`` scripts degraded-mode scenarios (donor crash, stragglers,
-transient errors, congestion). Defaults are API-compatible with the old
-single-NIC fixture, so existing callers keep working unchanged.
+Mirrors the paper's deployment (§7.1) and generalizes it: N client nodes
+running workloads, M remote peers donating DRAM, replication across
+donors — built on ``repro.fabric``: every node (clients *and* donors)
+gets its own simulated NIC, node pairs are joined by an explicit link
+model, and a ``FaultPlan`` scripts degraded-mode scenarios (donor crash,
+stragglers, transient errors, congestion).
+
+Multi-client mode (``num_clients > 1``) is the contention scenario the
+merge queue's admission control exists for: every client has its own
+``RDMABox`` (merge queue, poller, admission window) but they all share
+the donor nodes — contending for donor-region bandwidth and donor NIC
+processing, with deficit-round-robin fairness on the donor side. Each
+client's paging system gets a disjoint slice of every donor region so
+clients can never corrupt each other's pages. Defaults are
+API-compatible with the old single-client fixture (``.box``/``.paging``
+alias client 0), so existing callers keep working unchanged.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from dataclasses import replace
+from typing import Callable, List, Optional
 
-from ..core import BoxConfig, DiskTier, RDMABox, RemotePagingSystem
+from ..core import (AdmissionHook, BoxConfig, DiskTier, RDMABox,
+                    RemotePagingSystem)
 from ..fabric import Fabric, FaultPlan, LinkConfig
 
 
@@ -21,6 +32,7 @@ class MemoryCluster:
     def __init__(self, num_donors: int = 3, donor_pages: int = 16384,
                  box_config: Optional[BoxConfig] = None,
                  replication: int = 2, client_node: int = 0,
+                 num_clients: int = 1,
                  link: Optional[LinkConfig] = None,
                  faults: Optional[FaultPlan] = None,
                  stripe_pages: int = 16,
@@ -28,23 +40,47 @@ class MemoryCluster:
                  first_responder: bool = False,
                  evict_after: int = 3,
                  disk: Optional[DiskTier] = None,
+                 admission_hook_factory: Optional[
+                     Callable[[], AdmissionHook]] = None,
                  seed: int = 0) -> None:
+        assert num_clients >= 1
         cfg = box_config or BoxConfig()
+        if num_clients > 1 and cfg.admission_hook is not None \
+                and admission_hook_factory is None:
+            raise ValueError(
+                "BoxConfig.admission_hook is one stateful object — sharing "
+                "it across clients would merge their latency signals; pass "
+                "admission_hook_factory so each client gets its own hook")
         self.fabric = Fabric(cost=cfg.nic_cost, scale=cfg.nic_scale,
                              kernel_space=cfg.kernel_space, link=link,
                              faults=faults, seed=seed)
-        self.donors: List[int] = [client_node + 1 + i for i in range(num_donors)]
+        self.clients: List[int] = [client_node + i for i in range(num_clients)]
+        self.donors: List[int] = [client_node + num_clients + i
+                                  for i in range(num_donors)]
         self.donor_pages = donor_pages
         for node in self.donors:
             self.fabric.add_node(node, donor_pages=donor_pages)
-        self.box = RDMABox(client_node, peers=self.donors, config=box_config,
-                           fabric=self.fabric)
+        # each client gets its own engine + a disjoint slice of every
+        # donor region (placement is per-client, so slices must not overlap)
+        share = donor_pages // num_clients
+        self.boxes: List[RDMABox] = []
+        self.pagings: List[RemotePagingSystem] = []
+        for i, node in enumerate(self.clients):
+            client_cfg = cfg
+            if admission_hook_factory is not None:
+                client_cfg = replace(cfg, admission_hook=admission_hook_factory())
+            box = RDMABox(node, peers=self.donors, config=client_cfg,
+                          fabric=self.fabric)
+            self.boxes.append(box)
+            self.pagings.append(RemotePagingSystem(
+                box, donor_pages, replication=replication,
+                stripe_pages=stripe_pages, disk=disk,
+                write_through_disk=write_through_disk,
+                first_responder=first_responder, evict_after=evict_after,
+                region_base=i * share, region_pages=share))
+        self.box = self.boxes[0]
+        self.paging = self.pagings[0]
         self.directory = self.fabric.directory
-        self.paging = RemotePagingSystem(
-            self.box, donor_pages, replication=replication,
-            stripe_pages=stripe_pages, disk=disk,
-            write_through_disk=write_through_disk,
-            first_responder=first_responder, evict_after=evict_after)
 
     # ---- fault choreography (delegates to the fabric) ----------------------
     def crash_donor(self, node: int) -> None:
@@ -54,14 +90,34 @@ class MemoryCluster:
 
     def recover_donor(self, node: int) -> None:
         self.fabric.recover(node)
-        self.paging.recover_node(node)
+        for paging in self.pagings:
+            paging.recover_node(node)
+
+    def congest_path(self, client: int, donor: int, factor: float,
+                     until_us: Optional[float] = None) -> None:
+        """Congestion episode on one client↔donor path — both directions,
+        so the forward data leg AND the donor's ack leg degrade (the
+        signal the congestion-aware admission hook reacts to)."""
+        self.fabric.congest(client, donor, factor, until_us=until_us)
+        self.fabric.congest(donor, client, factor, until_us=until_us)
+
+    def clear_path(self, client: int, donor: int) -> None:
+        self.fabric.clear_congestion(client, donor)
+        self.fabric.clear_congestion(donor, client)
 
     def stats(self) -> dict:
-        return {"box": self.box.stats(), "paging": self.paging.stats(),
-                "fabric": self.fabric.stats()}
+        out = {"box": self.box.stats(), "paging": self.paging.stats(),
+               "fabric": self.fabric.stats()}
+        if len(self.boxes) > 1:
+            out["clients"] = {node: {"box": box.stats(),
+                                     "paging": paging.stats()}
+                              for node, box, paging in
+                              zip(self.clients, self.boxes, self.pagings)}
+        return out
 
     def close(self) -> None:
-        self.box.close()
+        for box in self.boxes:
+            box.close()
         self.fabric.close()
 
     def __enter__(self) -> "MemoryCluster":

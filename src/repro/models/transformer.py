@@ -8,7 +8,6 @@ policy applies per-layer.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS_BF16 = 197e12     # TPU v5e per chip

@@ -1,7 +1,6 @@
 """Integration tests: NIC + channels + polling + RDMABox facade + paging."""
 
 import threading
-import time
 
 import numpy as np
 import pytest

@@ -10,8 +10,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import (BoxConfig, PollConfig, PollMode, RDMABox,
-                        RegionDirectory, RemotePagingSystem, RemoteRegion,
+from repro.core import (BoxConfig, RDMABox,
+                        RegionDirectory, RemoteRegion,
                         TransferError, WCStatus, PAGE_SIZE)
 from repro.fabric import Fabric, FaultPlan, LinkConfig
 from repro.memory import MemoryCluster, OffloadConfig, OffloadManager
@@ -86,7 +86,10 @@ def test_legacy_rdmabox_signature_still_works():
 
 def test_transfer_error_carries_completion_details():
     plan = FaultPlan(seed=3).flaky(1, prob=1.0, max_errors=2)
-    with MemoryCluster(num_donors=1, donor_pages=512, box_config=FAST,
+    # rnr_retry_limit=0: this test targets the error-surfacing path, so the
+    # in-engine transient retry (tested in test_multiclient.py) is disabled
+    with MemoryCluster(num_donors=1, donor_pages=512,
+                       box_config=fast_cfg(rnr_retry_limit=0),
                        faults=plan) as c:
         fut = c.box.write(1, 0, page(2))
         err = fut.exception(timeout=10)          # non-raising accessor

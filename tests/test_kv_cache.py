@@ -86,7 +86,6 @@ def test_spill_fetch_roundtrip():
 
 
 def test_offload_tree_roundtrip():
-    import jax.numpy as jnp
     with MemoryCluster(num_donors=3, donor_pages=1 << 14) as cluster:
         mgr = OffloadManager(cluster.paging)
         tree = {"a": np.arange(1000, dtype=np.float32).reshape(10, 100),

@@ -9,7 +9,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (AdmissionController, BatchPolicy, MergeQueue,
-                        RegMode, Verb, WorkRequest, contiguous_runs, plan)
+                        Verb, WorkRequest, contiguous_runs, plan)
 
 
 def wr(dest, addr, n=1, verb=Verb.WRITE):

@@ -1,0 +1,338 @@
+"""Multi-client fabric: shared donors, donor-side ack traffic, fairness,
+congestion-aware admission, and transient-error retry.
+
+The scenarios ROADMAP items 2-4 call for: several RDMABox endpoints
+(each with its own merge queue, poller, admission window) attached to one
+Fabric, contending for shared donors whose NICs now carry the
+donor→client completion traffic.
+"""
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (BoxConfig, CongestionAwareHook, RDMABox,
+                        TransferError, WCStatus, PAGE_SIZE)
+from repro.fabric import Fabric, FaultPlan, FaultState, LinkConfig
+from repro.memory import MemoryCluster, OffloadConfig, OffloadManager
+
+FAST = BoxConfig(nic_scale=2e-8)
+
+
+def fast_cfg(**kw):
+    return BoxConfig(nic_scale=2e-8, **kw)
+
+
+def page(seed):
+    return np.random.default_rng(seed).integers(0, 255, PAGE_SIZE).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# shared donors: several endpoints on one fabric
+# ---------------------------------------------------------------------------
+
+def test_two_boxes_share_one_donor():
+    """Two RDMABox endpoints attach to one fabric and page against the
+    same donor without corrupting each other (disjoint page ranges)."""
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(9, donor_pages=1024)
+        boxes = [RDMABox(0, fabric=fab, peers=[9], config=FAST),
+                 RDMABox(1, fabric=fab, peers=[9], config=FAST)]
+        try:
+            datas = {b: [page(100 * b + i) for i in range(8)]
+                     for b in range(2)}
+            futs = []
+            for b, box in enumerate(boxes):
+                for i, d in enumerate(datas[b]):
+                    futs.append(box.write(9, 512 * b + i, d))
+            for f in futs:
+                f.wait(10)
+            for b, box in enumerate(boxes):
+                for i, d in enumerate(datas[b]):
+                    out = np.zeros(PAGE_SIZE, np.uint8)
+                    box.read(9, 512 * b + i, 1, out=out).wait(10)
+                    assert np.array_equal(out, d), (b, i)
+            # the donor's NIC served BOTH clients and accounted per client
+            service = fab.nic(9).fairness_snapshot()
+            assert set(service) == {0, 1}
+            assert all(s["ops"] >= 16 for s in service.values())
+        finally:
+            for box in boxes:
+                box.close()
+
+
+def test_completions_route_through_donor_nic_and_reverse_link():
+    """Donor→client ack traffic rides the donor's own NIC and the
+    donor→client link, not a client-side shortcut."""
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(1, donor_pages=256)
+        box = RDMABox(0, fabric=fab, config=FAST)
+        try:
+            for i in range(8):
+                box.write(1, i, page(i)).wait(10)
+            donor = fab.nic(1).stats.snapshot()
+            assert donor["served_wqes"] >= 8
+            assert donor["acks_sent"] >= 8
+            assert donor["bytes_on_wire"] > 0          # acks on donor egress
+            # reverse link carried the acks (as control messages)
+            assert fab.link(1, 0).transfers.value >= 8
+            assert fab.link(1, 0).ctrl_transfers.value >= 8
+            # client still owns the CQE accounting
+            assert box.nic.stats.completions.value >= 8
+        finally:
+            box.close()
+
+
+def test_multiclient_paging_uses_disjoint_donor_slices():
+    """Same page_id on two clients must land on different donor pages —
+    placement is per-client, so slices are carved disjoint."""
+    with MemoryCluster(num_donors=2, donor_pages=2048, box_config=FAST,
+                       replication=2, num_clients=2) as c:
+        assert c.clients == [0, 1] and c.donors == [2, 3]
+        a0 = set(c.pagings[0].replicas(0)) | set(c.pagings[0].replicas(17))
+        a1 = set(c.pagings[1].replicas(0)) | set(c.pagings[1].replicas(17))
+        assert not (a0 & a1), "clients share remote pages"
+        v0, v1 = page(1), page(2)
+        c.pagings[0].swap_out(0, v0, wait=True)
+        c.pagings[1].swap_out(0, v1, wait=True)
+        assert np.array_equal(c.pagings[0].swap_in(0), v0)
+        assert np.array_equal(c.pagings[1].swap_in(0), v1)
+
+
+def test_slow_donor_backpressures_via_ack_path():
+    """Congesting only the REVERSE (donor→client) path must slow the
+    client's writes: completions now travel through the donor's NIC and
+    link, so a degraded ack path holds admission-window bytes longer."""
+    plan = FaultPlan().congest(1, 0, 400.0)     # only donor1 → client0
+    with MemoryCluster(num_donors=2, donor_pages=2048,
+                       box_config=BoxConfig(nic_scale=1e-6),
+                       replication=1, faults=plan,
+                       link=LinkConfig(latency_us=500.0)) as c:
+        data = page(3)
+        t0 = time.perf_counter()
+        c.box.write(2, 0, data).wait(10)        # healthy donor
+        healthy = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        c.box.write(1, 0, data).wait(30)        # congested ack path
+        congested = time.perf_counter() - t0
+        assert congested > healthy * 3, (healthy, congested)
+
+
+# ---------------------------------------------------------------------------
+# admission fairness across clients sharing a donor
+# ---------------------------------------------------------------------------
+
+def test_two_clients_bounded_throughput_skew():
+    """Two clients running identical workloads against ONE shared donor
+    finish within 2x of each other (deficit-round-robin donor service),
+    and every page reads back intact."""
+    n = 32
+    with MemoryCluster(num_donors=1, donor_pages=1 << 13,
+                       box_config=BoxConfig(nic_scale=5e-7),
+                       replication=1, num_clients=2) as c:
+        walls = {}
+
+        def work(idx):
+            paging = c.pagings[idx]
+            datas = {pid: page(1000 * idx + pid) for pid in range(n)}
+            t0 = time.perf_counter()
+            for pid, d in datas.items():
+                paging.swap_out(pid, d, wait=True)
+            for pid, d in datas.items():
+                assert np.array_equal(paging.swap_in(pid), d), (idx, pid)
+            walls[idx] = time.perf_counter() - t0
+
+        ts = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        skew = max(walls.values()) / min(walls.values())
+        assert skew < 2.0, f"throughput skew {skew:.2f}x: {walls}"
+        service = c.fabric.nic(c.donors[0]).fairness_snapshot()
+        assert set(service) == {0, 1}
+        assert service[0]["bytes"] == service[1]["bytes"]
+
+
+# ---------------------------------------------------------------------------
+# congestion-aware admission window
+# ---------------------------------------------------------------------------
+
+def test_congestion_hook_shrinks_then_recovers():
+    """A congestion episode on the donor path shrinks the admission
+    window multiplicatively; after the episode ends it re-expands."""
+    hooks = []
+
+    def factory():
+        hook = CongestionAwareHook()
+        hooks.append(hook)
+        return hook
+
+    with MemoryCluster(num_donors=1, donor_pages=4096,
+                       box_config=BoxConfig(nic_scale=1e-7),
+                       replication=1, num_clients=1,
+                       link=LinkConfig(latency_us=300.0),
+                       admission_hook_factory=factory) as c:
+        hook = hooks[0]
+        donor = c.donors[0]
+        data = page(7)
+        base_window = c.box.cfg.window_bytes
+        for pid in range(64):                     # healthy: calibrate
+            c.paging.swap_out(pid, data, wait=True)
+        # relative assertions: a loaded machine can cause an occasional
+        # spurious adjustment, but the episode must dominate the noise
+        healthy = hook.window_fraction
+        assert healthy >= 0.5, hook.snapshot()
+        c.congest_path(0, donor, 20.0)            # episode (both directions)
+        for pid in range(48):
+            c.paging.swap_out(pid, data, wait=True)
+        congested = hook.window_fraction
+        assert congested <= healthy / 4, hook.snapshot()
+        assert c.box.stats()["admission_limit"] < base_window
+        c.clear_path(0, donor)                    # episode over
+        for pid in range(96):
+            c.paging.swap_out(pid % 64, data, wait=True)
+        recovered = hook.window_fraction
+        assert recovered >= congested * 2, hook.snapshot()
+        assert hook.shrinks.value >= 1 and hook.grows.value >= 1
+
+
+def test_faultplan_congestion_episode_expires():
+    """FaultPlan.congest(..., until_us=) lifts itself once virtual time
+    passes the bound."""
+    t = [0.0]
+    st = FaultState(FaultPlan().congest(0, 1, 8.0, until_us=100.0),
+                    now_us=lambda: t[0])
+    assert st.wire_multiplier(0, 1) == 8.0
+    assert st.serve_multiplier(1, 0) == 1.0     # reverse path unaffected
+    t[0] = 101.0
+    assert st.wire_multiplier(0, 1) == 1.0      # episode over
+    # imperative episodes work the same way
+    st.congest_link(0, 1, 5.0)
+    assert st.wire_multiplier(0, 1) == 5.0
+    st.clear_congestion(0, 1)
+    assert st.wire_multiplier(0, 1) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# bounded in-engine RNR retry
+# ---------------------------------------------------------------------------
+
+def test_rnr_retry_recovers_transient_fault():
+    """A transient RNR streak shorter than the retry budget is absorbed
+    in-engine: the caller's future succeeds, data lands."""
+    plan = FaultPlan(seed=11).flaky(1, prob=1.0, max_errors=2)
+    with MemoryCluster(num_donors=1, donor_pages=512,
+                       box_config=fast_cfg(rnr_retry_limit=3),
+                       faults=plan) as c:
+        data = page(5)
+        fut = c.box.write(1, 0, data)
+        wc = fut.wait(10)                        # no error surfaces
+        assert wc.status is WCStatus.SUCCESS
+        assert c.box.rnr_retries.value >= 2
+        out = np.zeros(PAGE_SIZE, np.uint8)
+        c.box.read(1, 0, 1, out=out).wait(10)
+        assert np.array_equal(out, data)
+
+
+def test_rnr_retry_budget_exhausted_surfaces_error():
+    """A persistent RNR fault outlives the retry budget and surfaces as a
+    transient TransferError (paging failover takes it from there)."""
+    plan = FaultPlan(seed=12).flaky(1, prob=1.0)         # never heals
+    with MemoryCluster(num_donors=1, donor_pages=512,
+                       box_config=fast_cfg(rnr_retry_limit=2),
+                       faults=plan) as c:
+        fut = c.box.write(1, 0, page(6))
+        err = fut.exception(timeout=10)
+        assert isinstance(err, TransferError) and err.transient
+        assert err.status is WCStatus.RNR_RETRY_ERR
+        assert c.box.rnr_retries.value == 2      # exactly the budget
+        assert c.box.stats()["rnr_retries"] == 2
+
+
+# ---------------------------------------------------------------------------
+# offload tier across the multi-client fabric
+# ---------------------------------------------------------------------------
+
+def test_parallel_fetch_survives_donor_crash():
+    with MemoryCluster(num_donors=3, donor_pages=4096, box_config=FAST,
+                       replication=2, evict_after=1) as c:
+        om = OffloadManager(c.paging, OffloadConfig(acked_writes=True,
+                                                    fetch_parallel=True))
+        t = np.random.default_rng(3).normal(size=(64, 64)).astype(np.float32)
+        om.offload("w", t, wait=True)
+        c.crash_donor(c.donors[1])
+        got = om.fetch("w")
+        assert np.array_equal(got, t)
+        assert c.paging.stats()["disk_reads"] == 0
+
+
+def test_write_buffer_serves_inflight_swapouts():
+    """An async swap-out racing its own swap-in must serve the fresh
+    bytes from the in-flight write buffer — RDMA only orders ops within
+    one QP, and a page's write and read ride different channels."""
+    with MemoryCluster(num_donors=3, donor_pages=1 << 13,
+                       box_config=FAST) as c:
+        datas = {i: page(500 + i) for i in range(64)}
+        for pid, d in datas.items():
+            c.paging.swap_out(pid, d)           # async, not awaited
+            got = c.paging.swap_in(pid)         # immediate read-back
+            assert np.array_equal(got, d), pid
+        assert c.paging.stats()["write_buffer_hits"] >= 1
+        c.box.flush()
+        # buffer drains once writes complete; reads now come from donors
+        deadline = time.perf_counter() + 5
+        while c.paging._wb and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert not c.paging._wb, "write buffer never drained"
+        hits_before = c.paging.stats()["write_buffer_hits"]
+        for pid, d in datas.items():
+            assert np.array_equal(c.paging.swap_in(pid), d), pid
+        assert c.paging.stats()["write_buffer_hits"] == hits_before
+
+
+def test_overlapping_swapouts_converge_to_newest_bytes():
+    """Two async swap-outs of the same page ride different QPs and may
+    land at the donor in either order; the write buffer pins the newest
+    bytes until ALL writes drain, then settles the race with one final
+    rewrite — so both the in-flight reads and the donor's eventual state
+    are the newest version."""
+    with MemoryCluster(num_donors=3, donor_pages=1 << 13,
+                       box_config=FAST) as c:
+        final = {}
+        for pid in range(16):
+            v1, v2 = page(700 + pid), page(900 + pid)
+            c.paging.swap_out(pid, v1)          # async
+            c.paging.swap_out(pid, v2)          # overlapping, same page
+            final[pid] = v2
+            assert np.array_equal(c.paging.swap_in(pid), v2), pid
+        c.box.flush()
+        deadline = time.perf_counter() + 10
+        while c.paging._wb and time.perf_counter() < deadline:
+            time.sleep(0.01)
+        assert not c.paging._wb, "write buffer never drained"
+        for pid, want in final.items():         # donor state converged
+            assert np.array_equal(c.paging.swap_in(pid), want), pid
+
+
+def test_per_client_engines_are_independent():
+    """Each client owns its merge queue / admission window: exhausting
+    one client's window must not block the other client's traffic."""
+    # the link latency keeps each transfer in flight ~1ms real, so the
+    # burst below reliably fills the 8-page window (at a near-instant
+    # scale completions can drain as fast as the posting loop submits)
+    with MemoryCluster(num_donors=1, donor_pages=2048,
+                       box_config=BoxConfig(nic_scale=1e-6,
+                                            window_bytes=8 * PAGE_SIZE),
+                       link=LinkConfig(latency_us=500.0),
+                       replication=1, num_clients=2) as c:
+        # client 0: a burst far beyond its window
+        futs0 = [c.boxes[0].write(c.donors[0], i, page(i)) for i in range(64)]
+        # client 1 proceeds regardless
+        t0 = time.perf_counter()
+        c.boxes[1].write(c.donors[0], 0, page(99)).wait(10)
+        assert time.perf_counter() - t0 < 5.0
+        for f in futs0:
+            f.wait(30)
+        assert c.boxes[0].stats()["admission_blocked"] >= 1

@@ -1,7 +1,5 @@
 """Roofline report math + batching reg-mode resolution + report rendering."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core import RegMode, resolve_reg_mode

@@ -4,7 +4,6 @@ optimizer, data determinism, HLO analyzer."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import RunConfig, get_reduced
