@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_adaptive_sweep",   # Fig. 5
     "benchmarks.bench_polling",          # Fig. 9 + Fig. 10
     "benchmarks.bench_channels",         # Fig. 11
+    "benchmarks.bench_hotpath",          # per-page vs batch API hot path
     "benchmarks.bench_paging",           # Figs. 12/13
     "benchmarks.bench_faults",           # degraded-mode: crash/straggler/disk
     "benchmarks.bench_multiclient",      # shared donors: fairness + congestion

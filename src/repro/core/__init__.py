@@ -17,9 +17,10 @@ from .descriptors import (
 )
 from .merge_queue import MergeQueue
 from .nic import NICCostModel, SimulatedNIC
-from .paging import DiskTier, RemotePagingSystem
+from .paging import DiskTier, PrefetchBatch, RemotePagingSystem
 from .polling import Poller, PollConfig, PollMode
-from .rdmabox import BoxConfig, RDMABox, TransferError, TransferFuture
+from .rdmabox import (BatchFuture, BatchTransferError, BoxConfig, RDMABox,
+                      TransferError, TransferFuture)
 from .region import RegionDirectory, RemoteRegion
 
 __all__ = [
@@ -28,7 +29,9 @@ __all__ = [
     "resolve_reg_mode", "Channel", "ChannelSet", "CompletionQueue",
     "PAGE_SIZE", "RegMode", "TransferDescriptor", "Verb", "WCStatus",
     "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",
-    "NICCostModel", "SimulatedNIC", "DiskTier", "RemotePagingSystem",
+    "NICCostModel", "SimulatedNIC", "DiskTier", "PrefetchBatch",
+    "RemotePagingSystem",
     "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
+    "BatchFuture", "BatchTransferError",
     "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",
 ]

@@ -52,6 +52,18 @@ class MergeQueue:
         self.submitted.add()
         self._merge_check()
 
+    def submit_many(self, wrs: List[WorkRequest]) -> None:
+        """Enqueue a whole pre-formed vector under ONE lock acquisition,
+        then merge-check once — the batch-API hot path. The vector lands
+        contiguously, so the merger drains it as the run it already is
+        instead of re-discovering adjacency one request at a time."""
+        if not wrs:
+            return
+        with self._qlock:
+            self._queue.extend(wrs)
+        self.submitted.add(len(wrs))
+        self._merge_check()
+
     def _merge_check(self) -> None:
         # Only one merger at a time; everyone else returns immediately
         # (their request will ride in the merger's batch).

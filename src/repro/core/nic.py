@@ -33,6 +33,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
+import numpy as np
+
 from .completion import CompletionQueue
 from .descriptors import (
     AtomicCounter,
@@ -101,10 +103,18 @@ class Pacer:
         self.origin = origin
         self.min_sleep_real = min_sleep_real   # REAL seconds granularity
         self._vtime_us = 0.0  # absolute virtual timestamp of busy-period end
+        self._busy_us = 0.0   # total virtual time charged (modeled cost)
         self._lock = threading.Lock()
 
     def now_us(self) -> float:
         return (time.perf_counter() - self.origin) / self.scale
+
+    @property
+    def busy_us(self) -> float:
+        """Summed virtual microseconds charged to this resource — the
+        modeled cost of the work it did, independent of host-side gaps."""
+        with self._lock:
+            return self._busy_us
 
     def charge(self, v_us: float) -> float:
         """Advance the busy period; returns the virtual completion stamp."""
@@ -112,6 +122,7 @@ class Pacer:
             start = max(self._vtime_us, self.now_us())
             self._vtime_us = start + v_us
             end = self._vtime_us
+            self._busy_us += v_us
         ahead_real = (end - self.now_us()) * self.scale
         if ahead_real > self.min_sleep_real:
             time.sleep(ahead_real)
@@ -263,6 +274,19 @@ class SimulatedNIC:
     def now_us(self) -> float:
         return (time.perf_counter() - self._origin) / self.scale
 
+    def busy_snapshot(self) -> Dict[str, float]:
+        """Modeled virtual time (us) charged to each NIC resource. The max
+        over resources is the critical-path lower bound for the work done;
+        real elapsed over that bound is host-side engine overhead."""
+        pu = [p.busy_us for p in self._pu_pacers]
+        return {
+            "wire_busy_us": self._wire.busy_us,
+            "poster_busy_us": self._poster_pacer.busy_us,
+            "pu_busy_us": pu,
+            "critical_us": max([self._wire.busy_us,
+                                self._poster_pacer.busy_us] + pu),
+        }
+
     @property
     def outstanding(self) -> int:
         return self._outstanding.value
@@ -412,21 +436,22 @@ class SimulatedNIC:
             qp.cq.post(wc)
 
     def _move_data(self, desc: TransferDescriptor) -> None:
-        """Actually move the bytes (numpy), page-granular."""
+        """Actually move the bytes: one vectorized region access per
+        descriptor (single striped-lock round, one numpy slice copy per
+        request straight into/out of the caller's buffer — no intermediate
+        allocation)."""
         region = self.directory.lookup(desc.dest_node)
         if desc.verb == Verb.WRITE:
-            addr = desc.remote_addr
-            for req in desc.requests:
-                if req.payload is not None:
-                    region.write(req.remote_addr, req.payload)
-                addr += req.num_pages
+            region.writev([(req.remote_addr, req.payload)
+                           for req in desc.requests
+                           if req.payload is not None])
         else:  # READ
             for req in desc.requests:
-                data = region.read(req.remote_addr, req.num_pages)
-                if req.payload is not None:
-                    req.payload[...] = data.reshape(req.payload.shape)
-                else:
-                    req.payload = data
+                if req.payload is None:
+                    req.payload = np.empty((req.num_pages, PAGE_SIZE),
+                                           dtype=np.uint8)
+            region.readv([(req.remote_addr, req.num_pages, req.payload)
+                          for req in desc.requests])
 
     # ---- donor-side service (fabric mode) --------------------------------
     def serve_transfer(self, job: _DonorJob) -> None:

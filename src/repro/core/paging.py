@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .descriptors import PAGE_SIZE, AtomicCounter
-from .rdmabox import RDMABox, TransferFuture
+from .rdmabox import BatchFuture, RDMABox, TransferFuture
 
 
 class DiskTier:
@@ -257,26 +257,73 @@ class RemotePagingSystem:
         return futs
 
     def swap_out_batch(self, items: List[Tuple[int, np.ndarray]],
-                       timeout: float = 30.0) -> None:
-        """Acked bulk swap-out: post every page's replica writes first (so
-        the merge queue and admission window see the whole burst), then
-        resolve each page's outcomes with the same strike / stale /
-        disk-persist bookkeeping as ``swap_out(wait=True)``."""
-        posted = []
+                       timeout: float = 30.0,
+                       wait: bool = True) -> List[BatchFuture]:
+        """Bulk swap-out on the batched zero-copy hot path.
+
+        Every page's replica writes are grouped per donor and posted as
+        ONE ``write_pages`` vector per donor — a single merge-queue lock
+        acquisition and one ``BatchFuture`` per donor instead of
+        pages x replicas futures — so the merge queue and admission window
+        see the whole burst at once. With ``wait=True`` each page's
+        per-replica outcomes are then resolved with the same strike /
+        stale / disk-persist bookkeeping as ``swap_out(wait=True)``;
+        ``wait=False`` is the async fire-and-forget mirror (write-buffer
+        protection still applies) and returns the per-donor futures for
+        the caller to drain."""
+        by_donor: Dict[int, Tuple[list, list]] = {}
+        page_info = []
         for page_id, data in items:
             buf = np.ascontiguousarray(data, dtype=np.uint8).reshape(-1)
             assert buf.nbytes == PAGE_SIZE, "swap_out_batch takes whole pages"
             targets = self.live_replicas(page_id)
             done = self._wb_register(page_id, buf, len(targets))
-            futs = [self.box.write(d, a, buf, callback=done)
-                    for d, a in targets]
-            on_disk = self.write_through_disk or not futs
+            for donor, remote in targets:
+                pairs, cbs = by_donor.setdefault(donor, ([], []))
+                pairs.append((remote, buf))
+                cbs.append(done)
+            on_disk = self.write_through_disk or not targets
             if on_disk:
                 self.disk.write(page_id, buf)
-            posted.append((page_id, buf, targets, futs, on_disk))
-        for page_id, buf, targets, futs, on_disk in posted:
-            self._resolve_write_acks(page_id, buf, targets, futs, on_disk,
-                                     timeout)
+            page_info.append((page_id, buf, targets, on_disk))
+        futs = {donor: self.box.write_pages(donor, pairs, callbacks=cbs)
+                for donor, (pairs, cbs) in by_donor.items()}
+        if not wait:
+            return list(futs.values())
+        # None = the donor's whole vector timed out (outcome unknown ⇒
+        # treated as failed, same as a timed-out per-page ack)
+        errmaps: Dict[int, Optional[Dict]] = {}
+        for donor, fut in futs.items():
+            try:
+                errmaps[donor] = fut.errors(timeout=timeout)
+            except TimeoutError:
+                errmaps[donor] = None
+        for page_id, buf, targets, on_disk in page_info:
+            acks = 0
+            for donor, remote in targets:
+                errs = errmaps[donor]
+                err = TimeoutError() if errs is None else errs.get(remote)
+                if self._note_replica_outcome(donor, page_id, err):
+                    acks += 1
+            if acks == 0 and not on_disk:
+                self.disk.write(page_id, buf)   # all replicas failed
+        return list(futs.values())
+
+    def _note_replica_outcome(self, donor: int, page_id: int,
+                              err: Optional[Exception]) -> bool:
+        """Strike / stale bookkeeping for ONE replica write outcome (the
+        single source of truth for both the per-page and batched ack
+        paths); returns True when the replica acknowledged."""
+        if err is None:
+            self._clear_strikes(donor)
+            with self._lock:
+                self._stale.discard((donor, page_id))
+            return True
+        self._strike(donor)
+        self.write_failures.add()
+        with self._lock:            # replica kept its old bytes: stale
+            self._stale.add((donor, page_id))
+        return False
 
     def _resolve_write_acks(self, page_id: int, buf: np.ndarray,
                             targets: List[Tuple[int, int]], futs,
@@ -287,16 +334,8 @@ class RemotePagingSystem:
                 err = fut.exception(timeout=timeout)
             except TimeoutError:
                 err = TimeoutError()
-            if err is None:
+            if self._note_replica_outcome(donor, page_id, err):
                 acks += 1
-                self._clear_strikes(donor)
-                with self._lock:
-                    self._stale.discard((donor, page_id))
-            else:
-                self._strike(donor)
-                self.write_failures.add()
-                with self._lock:     # replica kept its old bytes: stale
-                    self._stale.add((donor, page_id))
         if acks == 0 and not on_disk:
             self.disk.write(page_id, buf)   # all replicas failed
 
@@ -373,12 +412,55 @@ class RemotePagingSystem:
             self._strike(reps[i][1])
         return None
 
-    def prefetch(self, page_id: int, out: np.ndarray) -> TransferFuture:
-        """Async read from the first live replica (straggler-tolerant path)."""
+    def _first_fresh_replica(self, page_id: int,
+                             stale: set) -> Optional[Tuple[int, int]]:
+        """First replica that is live AND not known-stale from a failed
+        acked write — the same eligibility rule ``swap_in`` applies, so a
+        prefetch can never 'succeed' with a replica's old bytes."""
         for donor, remote in self.replicas(page_id):
-            if self._live(donor):
-                return self.box.read(donor, remote, 1, out=out)
-        raise RuntimeError("no live replicas to prefetch from")
+            if self._live(donor) and (donor, page_id) not in stale:
+                return donor, remote
+        return None
+
+    def prefetch(self, page_id: int, out: np.ndarray) -> TransferFuture:
+        """Async read from the first fresh replica (straggler-tolerant path)."""
+        with self._lock:
+            stale = set(self._stale)
+        target = self._first_fresh_replica(page_id, stale)
+        if target is None:
+            raise RuntimeError("no live replicas to prefetch from")
+        return self.box.read(target[0], target[1], 1, out=out)
+
+    def prefetch_batch(self, items: List[Tuple[int, np.ndarray]]
+                       ) -> "PrefetchBatch":
+        """Post async reads for a whole vector of (page_id, out) pairs.
+
+        Write-buffer hits are served immediately from the in-flight
+        swap-out bytes; the rest group by each page's first live replica
+        donor into ONE ``read_pages`` vector per donor (the swap-in
+        mirror of the bulk swap-out path — single submit-lock
+        acquisition, donor-side copies land straight in the caller's
+        buffers). ``resolve()`` on the returned handle reports per-page
+        success; failed pages should take the ``swap_in`` failover read."""
+        by_donor: Dict[int, list] = {}
+        slots: List = []
+        with self._lock:
+            stale = set(self._stale)
+        for page_id, out in items:
+            pending = self.read_inflight(page_id)
+            if pending is not None:     # swap-out still in flight: serve
+                out[...] = pending.reshape(out.shape)   # the freshest bytes
+                slots.append(True)
+                continue
+            target = self._first_fresh_replica(page_id, stale)
+            if target is None:
+                slots.append(None)      # no fresh replica: caller fails over
+                continue
+            by_donor.setdefault(target[0], []).append((target[1], out))
+            slots.append(target)
+        futs = {donor: self.box.read_pages(donor, pairs)
+                for donor, pairs in by_donor.items()}
+        return PrefetchBatch(self, slots, futs)
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
@@ -393,3 +475,48 @@ class RemotePagingSystem:
             "evictions": self.evictions,
             "failed_donors": failed,
         }
+
+
+class PrefetchBatch:
+    """Handle for one posted ``prefetch_batch`` vector.
+
+    Tracks, per requested page: already served from the write buffer
+    (``True``), posted to a donor (``(donor, remote)``), or unservable
+    because no replica was live (``None``).
+    """
+
+    def __init__(self, paging: RemotePagingSystem, slots: List,
+                 futs: Dict[int, BatchFuture]) -> None:
+        self._paging = paging
+        self._slots = slots
+        self._futs = futs
+
+    def resolve(self, timeout: float = 10.0) -> List[bool]:
+        """Wait for every posted read; returns per-item success flags,
+        parallel to the ``items`` given to ``prefetch_batch`` (``True``
+        also for write-buffer hits). Donors that failed or timed out are
+        struck (feeding eviction) exactly like the serial failover read;
+        items reported ``False`` have NOT been filled and must take the
+        ``swap_in`` replica-failover path."""
+        errmaps: Dict[int, Optional[Dict]] = {}
+        for donor, fut in self._futs.items():
+            try:
+                errmaps[donor] = fut.errors(timeout=timeout)
+            except TimeoutError:
+                errmaps[donor] = None   # whole vector still in flight
+        out: List[bool] = []
+        for slot in self._slots:
+            if slot is True:
+                out.append(True)
+            elif slot is None:
+                out.append(False)
+            else:
+                donor, remote = slot
+                errs = errmaps[donor]
+                ok = errs is not None and remote not in errs
+                if ok:
+                    self._paging._clear_strikes(donor)
+                else:
+                    self._paging._strike(donor)
+                out.append(ok)
+        return out

@@ -7,16 +7,26 @@ One object per node wiring together the whole engine:
       →  completion queues  →  polling strategy  →  futures/callbacks
 
 ``read``/``write`` are page-granular and asynchronous, returning
-``TransferFuture``s. This is the abstraction the remote paging system
+``TransferFuture``s. ``write_pages``/``read_pages`` are the batched
+zero-copy hot path: a whole vector of (page, buffer-view) pairs enters the
+merge queue as one pre-formed run under a single lock acquisition and
+resolves to ONE ``BatchFuture`` (single event, per-page error map) instead
+of N futures. These are the abstractions the remote paging system
 (core/paging.py) and the JAX offload tier (memory/offload.py) are built on.
+
+Completion side: the futures table is striped into shard locks keyed by
+wr_id, and the poller hands whole WC *lists* to one batched handler, so
+admission release and future resolution amortize their lock traffic over
+the poll batch instead of paying per completion.
 """
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -36,6 +46,13 @@ from .merge_queue import MergeQueue
 from .nic import NICCostModel
 from .polling import Poller, PollConfig, PollMode
 from .region import RegionDirectory
+
+logger = logging.getLogger(__name__)
+
+# futures-table striping: shard locks keyed by wr_id so concurrent
+# submitters/pollers rarely contend on the same lock (power of two)
+_FUTURE_SHARDS = 16
+_SHARD_MASK = _FUTURE_SHARDS - 1
 
 
 class TransferError(RuntimeError):
@@ -61,6 +78,21 @@ class TransferError(RuntimeError):
         return self.status == WCStatus.RNR_RETRY_ERR
 
 
+class BatchTransferError(RuntimeError):
+    """One or more pages of a batched transfer failed.
+
+    ``errors`` maps remote page index → ``TransferError``; pages absent
+    from the map completed successfully.
+    """
+
+    def __init__(self, errors: Dict[int, TransferError]) -> None:
+        worst = next(iter(errors.values()))
+        super().__init__(
+            f"batched RDMA transfer failed on {len(errors)} page(s), "
+            f"e.g. page {next(iter(errors))}: {worst.status.name}")
+        self.errors = errors
+
+
 class TransferFuture:
     """Completion future for one WorkRequest."""
 
@@ -76,6 +108,10 @@ class TransferFuture:
         if wc.status != WCStatus.SUCCESS:
             self._error = TransferError(wc)
         self._event.set()
+
+    def resolve(self, req: WorkRequest, wc: WorkCompletion) -> None:
+        """Per-request resolution hook shared with ``BatchFuture``."""
+        self.set(wc)
 
     def wait(self, timeout: Optional[float] = None) -> WorkCompletion:
         if not self._event.wait(timeout=timeout):
@@ -98,6 +134,61 @@ class TransferFuture:
 
     def done(self) -> bool:
         return self._event.is_set()
+
+
+class BatchFuture:
+    """Completion future for one batched vector of page I/Os.
+
+    One event + one per-page error map for the whole vector — the
+    completion-side mirror of batching-on-MR: N pages cost one waiter
+    wakeup and one results object, not N events and N futures-dict
+    entries. Per-request callbacks (``WorkRequest.callback``) have all
+    fired by the time a waiter is released.
+    """
+
+    __slots__ = ("_event", "_lock", "_remaining", "_errors", "pages")
+
+    def __init__(self, num_requests: int) -> None:
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._remaining = num_requests
+        self._errors: Dict[int, TransferError] = {}
+        self.pages = num_requests
+        if num_requests == 0:
+            self._event.set()
+
+    def resolve(self, req: WorkRequest, wc: WorkCompletion) -> None:
+        with self._lock:
+            if wc.status != WCStatus.SUCCESS:
+                self._errors[req.remote_addr] = TransferError(wc)
+            self._remaining -= 1
+            done = self._remaining <= 0
+        if done:
+            self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def remaining(self) -> int:
+        with self._lock:
+            return self._remaining
+
+    def errors(self, timeout: Optional[float] = None) -> Dict[int, TransferError]:
+        """Wait for the whole batch, then return the per-page error map
+        keyed by remote page index (empty ⇒ every page succeeded).
+        Raises only TimeoutError — the failover paths inspect outcomes
+        per page instead of unwinding on the first error."""
+        if not self._event.wait(timeout=timeout):
+            raise TimeoutError("batched RDMA transfer did not complete in time")
+        with self._lock:
+            return dict(self._errors)
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Wait for the whole batch; raises ``BatchTransferError`` if any
+        page failed, ``TimeoutError`` if the batch is still in flight."""
+        errs = self.errors(timeout=timeout)
+        if errs:
+            raise BatchTransferError(errs)
 
 
 @dataclass
@@ -159,10 +250,20 @@ class RDMABox:
         )
         self.admission = AdmissionController(self.cfg.window_bytes,
                                              hook=self.cfg.admission_hook)
-        self._futures: Dict[int, TransferFuture] = {}
-        self._futures_lock = threading.Lock()
+        # striped futures table: shard locks keyed by wr_id
+        self._futures: List[Dict[int, object]] = \
+            [{} for _ in range(_FUTURE_SHARDS)]
+        self._futures_locks = [threading.Lock()
+                               for _ in range(_FUTURE_SHARDS)]
+        # flush(): event-driven drain tracking of in-flight requests
+        self._pending = 0
+        self._pending_cv = threading.Condition()
         self._retries: Dict[int, int] = {}      # wr_id -> RNR attempts so far
+        self._retries_lock = threading.Lock()
         self.rnr_retries = AtomicCounter()
+        self.callback_errors = AtomicCounter()
+        self._cb_log_lock = threading.Lock()
+        self._logged_cb_sites: set = set()
         self._closed = False
         # one merge queue per verb, as in the paper
         self._queues = {
@@ -172,7 +273,7 @@ class RDMABox:
                                    max_drain=self.cfg.max_drain),
         }
         self.poller = Poller(self.cfg.poll, self.channels.all_cqs(),
-                             self._on_completion)
+                             self._on_completions)
         self.poller.start()
         self._crossover = self.cfg.nic_cost.crossover_pages()
 
@@ -191,15 +292,41 @@ class RDMABox:
         return self._submit(Verb.READ, dest_node, page, num_pages, out,
                             callback)
 
+    def write_pages(self, dest_node: int,
+                    pages: Sequence[Tuple[int, np.ndarray]],
+                    callbacks: Optional[Sequence[Optional[Callable]]] = None,
+                    ) -> BatchFuture:
+        """Batched write: a vector of (remote page, buffer-view) pairs.
+
+        The vector is sorted by remote page and enters the merge queue as
+        one pre-formed run under a single lock acquisition; adjacent pages
+        merge into single WQEs on the way to the NIC. The buffers are
+        referenced, not copied, until the NIC moves them (zero-copy
+        scatter-gather). ``callbacks``, when given, is parallel to
+        ``pages`` and fires per page completion (before any waiter on the
+        returned future is released)."""
+        return self._submit_batch(Verb.WRITE, dest_node, pages, callbacks)
+
+    def read_pages(self, dest_node: int,
+                   pages: Sequence[Tuple[int, np.ndarray]],
+                   callbacks: Optional[Sequence[Optional[Callable]]] = None,
+                   ) -> BatchFuture:
+        """Batched read: each (remote page, out-buffer) pair is filled in
+        place — the donor-side copy lands directly in the caller's buffer.
+        Same single-lock single-future hot path as ``write_pages``."""
+        return self._submit_batch(Verb.READ, dest_node, pages, callbacks)
+
     def flush(self, timeout: float = 30.0) -> None:
-        """Wait until every submitted transfer has completed."""
-        deadline = time.perf_counter() + timeout
-        while time.perf_counter() < deadline:
-            with self._futures_lock:
-                if not self._futures:
-                    return
-            time.sleep(0.001)
-        raise TimeoutError("flush timed out with transfers in flight")
+        """Wait until every submitted transfer has completed.
+
+        Event-driven: sleeps on a condition variable that the batched
+        completion handler signals when the futures table drains — no
+        poll-sleep on the waiter and no wakeups while traffic is still in
+        flight."""
+        with self._pending_cv:
+            if not self._pending_cv.wait_for(lambda: self._pending <= 0,
+                                             timeout=timeout):
+                raise TimeoutError("flush timed out with transfers in flight")
 
     def close(self) -> None:
         self._closed = True
@@ -211,6 +338,8 @@ class RDMABox:
 
     def stats(self) -> Dict[str, object]:
         qr, qw = self._queues[Verb.READ], self._queues[Verb.WRITE]
+        drains = qr.drains.value + qw.drains.value
+        drained = qr.drained_requests.value + qw.drained_requests.value
         out = {
             "nic": self.nic.stats.snapshot(),
             "faults": self.fabric.faults.snapshot(),
@@ -219,9 +348,15 @@ class RDMABox:
             "admission_limit": self.admission.current_limit,
             "in_flight_bytes": self.admission.in_flight_bytes,
             "rnr_retries": self.rnr_retries.value,
+            "callback_errors": self.callback_errors.value,
+            "pending_requests": self._pending,
             "merge": {
                 "submitted": qr.submitted.value + qw.submitted.value,
-                "drains": qr.drains.value + qw.drains.value,
+                "drains": drains,
+                "drained_requests": drained,
+                # avg requests per posting event — the WQE-reduction
+                # opportunity the merge queue actually realized
+                "merge_ratio": drained / max(1, drains),
                 "solo_posts": qr.solo_posts.value + qw.solo_posts.value,
             },
         }
@@ -238,9 +373,52 @@ class RDMABox:
                          enqueue_time=time.perf_counter(),
                          callback=callback)
         fut = TransferFuture()
-        with self._futures_lock:
-            self._futures[wr.wr_id] = fut
+        with self._futures_locks[wr.wr_id & _SHARD_MASK]:
+            self._futures[wr.wr_id & _SHARD_MASK][wr.wr_id] = fut
+        with self._pending_cv:
+            self._pending += 1
         self._queues[verb].submit(wr)
+        return fut
+
+    def _submit_batch(self, verb: Verb, dest: int,
+                      pages: Sequence[Tuple[int, np.ndarray]],
+                      callbacks: Optional[Sequence[Optional[Callable]]],
+                      ) -> BatchFuture:
+        if callbacks is None:
+            callbacks = (None,) * len(pages)
+        elif len(callbacks) != len(pages):
+            # a short callbacks vector would silently zip-truncate the
+            # page vector and leave the BatchFuture unresolvable
+            raise ValueError(
+                f"callbacks length {len(callbacks)} != pages length "
+                f"{len(pages)}")
+        fut = BatchFuture(len(pages))
+        if not pages:
+            return fut
+        # sorted by remote page ⇒ the vector is a pre-formed run (or a few),
+        # so max_drain windows drain it in mergeable order
+        items = sorted(zip(pages, callbacks), key=lambda it: it[0][0])
+        now = time.perf_counter()
+        wrs = []
+        for (page, buf), cb in items:
+            n = max(1, buf.nbytes // PAGE_SIZE) if buf is not None else 1
+            wrs.append(WorkRequest(verb=verb, dest_node=dest,
+                                   remote_addr=page, num_pages=n,
+                                   payload=buf, enqueue_time=now,
+                                   callback=cb))
+        # register the whole vector: one lock acquisition per touched shard,
+        # one pending-count update
+        by_shard: Dict[int, List[WorkRequest]] = {}
+        for wr in wrs:
+            by_shard.setdefault(wr.wr_id & _SHARD_MASK, []).append(wr)
+        for s, group in by_shard.items():
+            table = self._futures[s]
+            with self._futures_locks[s]:
+                for wr in group:
+                    table[wr.wr_id] = fut
+        with self._pending_cv:
+            self._pending += len(wrs)
+        self._queues[verb].submit_many(wrs)
         return fut
 
     def _make_poster(self) -> Callable[[List[WorkRequest]], None]:
@@ -263,23 +441,45 @@ class RDMABox:
 
         return poster
 
-    def _on_completion(self, wc: WorkCompletion) -> None:
-        self.admission.release(wc.nbytes)
-        self.admission.hook.observe(wc)
-        if self.cfg.app_handler is not None:
-            self.cfg.app_handler(wc)
-        retried_ids = self._maybe_retry(wc)
-        with self._futures_lock:
-            futs = []
-            for r in wc.requests:
-                if r.wr_id in retried_ids:
-                    futs.append(None)           # still in flight: retrying
-                    continue
-                self._retries.pop(r.wr_id, None)
-                futs.append(self._futures.pop(r.wr_id, None))
-        for r, fut in zip(wc.requests, futs):
-            if r.wr_id in retried_ids:
-                continue
+    def _on_completions(self, wcs: List[WorkCompletion]) -> None:
+        """Batched completion handler: the poller hands the whole polled
+        list, so the admission release is ONE window update and future
+        pops are one lock acquisition per touched shard."""
+        total = 0
+        hook = self.admission.hook
+        app = self.cfg.app_handler
+        for wc in wcs:
+            total += wc.nbytes
+            hook.observe(wc)
+            if app is not None:
+                app(wc)
+        self.admission.release(total)
+        # requests being retried stay in flight; everything else resolves now
+        work: List[Tuple[WorkCompletion, WorkRequest]] = []
+        for wc in wcs:
+            retried = self._maybe_retry(wc)
+            if retried:
+                work.extend((wc, r) for r in wc.requests
+                            if r.wr_id not in retried)
+            else:
+                work.extend((wc, r) for r in wc.requests)
+        if not work:
+            return
+        by_shard: Dict[int, List[int]] = {}
+        for i, (_, r) in enumerate(work):
+            by_shard.setdefault(r.wr_id & _SHARD_MASK, []).append(i)
+        futs: List = [None] * len(work)
+        for s, idxs in by_shard.items():
+            table = self._futures[s]
+            with self._futures_locks[s]:
+                for i in idxs:
+                    futs[i] = table.pop(work[i][1].wr_id, None)
+        if self._retries:
+            with self._retries_lock:
+                for _, r in work:
+                    self._retries.pop(r.wr_id, None)
+        popped = 0
+        for (wc, r), fut in zip(work, futs):
             # callback BEFORE the future resolves: a thread released by
             # fut.wait() must observe the callback's bookkeeping (e.g. the
             # paging write-buffer release) as already done. A raising
@@ -288,9 +488,30 @@ class RDMABox:
                 try:
                     r.callback(wc)
                 except Exception:
-                    pass
+                    self._note_callback_error(r.callback)
             if fut is not None:
-                fut.set(wc)
+                fut.resolve(r, wc)
+                popped += 1
+        if popped:
+            with self._pending_cv:
+                self._pending -= popped
+                if self._pending <= 0:
+                    self._pending_cv.notify_all()
+
+    def _note_callback_error(self, cb) -> None:
+        """Swallowed-exception accounting: every callback failure counts in
+        ``callback_errors``; the full traceback is logged once per distinct
+        callback site so a hot loop cannot flood the log."""
+        self.callback_errors.add()
+        site = getattr(cb, "__qualname__", None) or repr(cb)
+        with self._cb_log_lock:
+            first = site not in self._logged_cb_sites
+            if first:
+                self._logged_cb_sites.add(site)
+        if first:
+            logger.exception(
+                "completion callback %s raised (suppressed; counted in "
+                "callback_errors, logged once per site)", site)
 
     def _maybe_retry(self, wc: WorkCompletion) -> set:
         """Bounded in-engine retry for transient (RNR) completions: each
@@ -300,11 +521,14 @@ class RDMABox:
                 or self.cfg.rnr_retry_limit <= 0 or self._closed:
             return set()
         retried: List[tuple] = []
-        with self._futures_lock:
-            for r in wc.requests:
+        for r in wc.requests:
+            with self._futures_locks[r.wr_id & _SHARD_MASK]:
+                present = r.wr_id in self._futures[r.wr_id & _SHARD_MASK]
+            if not present:
+                continue
+            with self._retries_lock:
                 attempt = self._retries.get(r.wr_id, 0)
-                if attempt < self.cfg.rnr_retry_limit \
-                        and r.wr_id in self._futures:
+                if attempt < self.cfg.rnr_retry_limit:
                     self._retries[r.wr_id] = attempt + 1
                     retried.append((r, attempt + 1))
         for r, attempt in retried:

@@ -173,7 +173,6 @@ class PagedKVCache:
         """Evict a sequence's pages to the remote pool (coalesced writes)."""
         assert self.box is not None, "no RDMA box attached"
         pages = self.tables[seq_id]
-        futs = []
         # reserve ONE contiguous remote range per sequence: sequential spill
         # writes stay adjacent ⇒ the merge queue coalesces them (and the
         # fetch path reads back whole runs). Interleaving a shared bump
@@ -182,6 +181,7 @@ class PagedKVCache:
         with self._lock:
             base_remote = self._remote_next
             self._remote_next += len(pages) * self._rdma_pages
+        pairs = []
         for pos, page in enumerate(pages):
             remote = base_remote + pos * self._rdma_pages
             data = np.ascontiguousarray(self.pool[page]).view(np.uint8).reshape(-1)
@@ -189,11 +189,11 @@ class PagedKVCache:
             if data.nbytes < want:                       # pad to page multiple
                 data = np.concatenate(
                     [data, np.zeros(want - data.nbytes, np.uint8)])
-            futs.append(self.box.write(donor, remote, data,
-                                       num_pages=self._rdma_pages))
+            pairs.append((remote, data))
             self._spilled[(seq_id, pos)] = remote
-        for f in futs:
-            f.wait()
+        # the sequence's whole range rides the batch API: one submit-lock
+        # acquisition, one future for the spill instead of one per page
+        self.box.write_pages(donor, pairs).wait()
         with self._lock:
             self.alloc.free(pages)
         self.tables[seq_id] = [-1] * len(pages)   # -1 = remote
@@ -204,16 +204,18 @@ class PagedKVCache:
         n = len(self.tables[seq_id])
         with self._lock:
             local = self.alloc.alloc(n)
-        futs = []
+        pairs, bufs = [], []
         for pos, page in enumerate(local):
             with self._lock:
                 remote = self._spilled.pop((seq_id, pos))
                 self._remote_free.append(remote)
             buf = np.empty(self._rdma_pages * PAGE_SIZE, np.uint8)
-            fut = self.box.read(donor, remote, self._rdma_pages, out=buf)
-            futs.append((fut, page, buf))
-        for fut, page, buf in futs:
-            fut.wait()
+            pairs.append((remote, buf))
+            bufs.append((page, buf))
+        # one batched read for the sequence: donor-side copies land
+        # straight in the per-page buffers, one event for the whole fetch
+        self.box.read_pages(donor, pairs).wait()
+        for page, buf in bufs:
             flat = buf[: self._page_bytes].view(self.dtype)
             self.pool[page] = flat.reshape(self.page_tokens, self.kv_features)
         self.tables[seq_id] = local

@@ -74,22 +74,21 @@ class OffloadManager:
         pad = n_pages * PAGE_SIZE - raw.nbytes
         if pad:
             raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+        # every path rides the batched hot path: the tensor's whole page
+        # vector posts per donor as one write_pages run (single submit-lock
+        # acquisition, one BatchFuture per donor instead of
+        # pages x replicas futures)
+        items = [(meta["base"] + i, raw[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
+                 for i in range(n_pages)]
         if wait and self.cfg.acked_writes:
-            # bulk path: every page posts before any ack is awaited, so
-            # the merge queue sees the whole burst; per-replica outcomes
-            # (strikes, stale marks, disk persistence) are then resolved
-            self.paging.swap_out_batch(
-                [(meta["base"] + i, raw[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
-                 for i in range(n_pages)],
-                timeout=self.cfg.write_timeout)
+            # acked path: per-replica outcomes (strikes, stale marks, disk
+            # persistence) resolve after the whole burst has posted
+            self.paging.swap_out_batch(items, timeout=self.cfg.write_timeout)
             return
-        futs = []
-        for i in range(n_pages):
-            futs.extend(self.paging.swap_out(
-                meta["base"] + i, raw[i * PAGE_SIZE:(i + 1) * PAGE_SIZE]))
+        futs = self.paging.swap_out_batch(items, wait=False)
         if wait:
             for f in futs:
-                f.wait()
+                f.wait(self.cfg.write_timeout)
         else:
             self._inflight[name] = futs
 
@@ -114,34 +113,16 @@ class OffloadManager:
         return raw.view(meta["dtype"]).reshape(meta["shape"]).copy()
 
     def _fetch_burst(self, base: int, n_pages: int, buf: np.ndarray) -> None:
-        """Post all page reads up front (merge-friendly), then resolve;
-        any page whose prefetch fails takes the replica-failover read."""
-        views = [buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE]
+        """Post the whole page vector as one batched prefetch (one
+        read_pages run per donor, donor copies land straight in ``buf``'s
+        views), then resolve; any page whose prefetch fails — error, no
+        live replica, or timeout — takes the replica-failover read."""
+        items = [(base + i, buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
                  for i in range(n_pages)]
-        futs = []
-        for i in range(n_pages):
-            pending = self.paging.read_inflight(base + i)
-            if pending is not None:
-                # swap-out still in flight: the donor may not have the
-                # bytes yet — serve from the paging write buffer
-                views[i][...] = pending
-                futs.append(True)
-                continue
-            try:
-                futs.append(self.paging.prefetch(base + i, views[i]))
-            except RuntimeError:            # no live replica right now
-                futs.append(None)
-        for i, fut in enumerate(futs):
-            if fut is True:                 # already served from the buffer
-                continue
-            ok = False
-            if fut is not None:
-                try:
-                    ok = fut.exception(timeout=self.cfg.fetch_timeout) is None
-                except TimeoutError:
-                    ok = False
+        batch = self.paging.prefetch_batch(items)
+        for i, ok in enumerate(batch.resolve(timeout=self.cfg.fetch_timeout)):
             if not ok:
-                views[i][...] = self.paging.swap_in(
+                items[i][1][...] = self.paging.swap_in(
                     base + i, timeout=self.cfg.fetch_timeout)
 
     # ---- pytree convenience --------------------------------------------------

@@ -105,6 +105,12 @@ class MemoryCluster:
         self.fabric.clear_congestion(client, donor)
         self.fabric.clear_congestion(donor, client)
 
+    def flush(self, timeout: float = 30.0) -> None:
+        """Drain every client engine: event-driven per-box flush (each box
+        sleeps on its futures-table condition variable — no poll loop)."""
+        for box in self.boxes:
+            box.flush(timeout=timeout)
+
     def stats(self) -> dict:
         out = {"box": self.box.stats(), "paging": self.paging.stats(),
                "fabric": self.fabric.stats()}

@@ -1,0 +1,96 @@
+"""Batching-policy planning + registration-mode crossover edge cases.
+
+Companion to the hypothesis suite in test_merge_queue.py, but dependency
+free: these must run everywhere (the crossover boundary and the HYBRID
+minimality property guard the batch hot path's WQE/MMIO accounting).
+"""
+
+from repro.core import (BatchPolicy, MergeQueue, RegMode, Verb, WorkRequest,
+                        plan, resolve_reg_mode)
+
+
+def wr(dest, addr, n=1, verb=Verb.WRITE):
+    return WorkRequest(verb=verb, dest_node=dest, remote_addr=addr, num_pages=n)
+
+
+def _counts(groups):
+    wqes = sum(len(d) for d, _ in groups)
+    mmios = sum(1 if db else len(d) for d, db in groups)
+    return wqes, mmios
+
+
+# ---------------------------------------------------------------------------
+# registration-mode resolution (Fig. 4 crossover)
+# ---------------------------------------------------------------------------
+
+def test_resolve_reg_mode_exact_crossover_boundary():
+    # user space: strictly below the crossover stays preMR; AT the
+    # crossover (and above) dynMR wins — the boundary itself is dynMR
+    assert resolve_reg_mode(RegMode.AUTO, 99, kernel_space=False,
+                            crossover_pages=100) == RegMode.PRE_MR
+    assert resolve_reg_mode(RegMode.AUTO, 100, kernel_space=False,
+                            crossover_pages=100) == RegMode.DYN_MR
+    assert resolve_reg_mode(RegMode.AUTO, 101, kernel_space=False,
+                            crossover_pages=100) == RegMode.DYN_MR
+
+
+def test_resolve_reg_mode_kernel_vs_user_auto():
+    # kernel space registers physical addresses: AUTO is dynMR at ANY size
+    for n in (1, 99, 100, 10**6):
+        assert resolve_reg_mode(RegMode.AUTO, n, kernel_space=True,
+                                crossover_pages=100) == RegMode.DYN_MR
+    # explicit modes pass through untouched in both spaces
+    assert resolve_reg_mode(RegMode.PRE_MR, 10**6, kernel_space=True,
+                            crossover_pages=1) == RegMode.PRE_MR
+    assert resolve_reg_mode(RegMode.DYN_MR, 1, kernel_space=False,
+                            crossover_pages=10**9) == RegMode.DYN_MR
+
+
+def test_plan_auto_resolves_per_descriptor_size():
+    # a merged run crossing the threshold flips to dynMR in user space
+    # while a lone small request in the SAME drained batch stays preMR
+    reqs = [wr(1, i) for i in range(8)] + [wr(1, 100)]
+    groups = plan(BatchPolicy.HYBRID, reqs, RegMode.AUTO,
+                  kernel_space=False, crossover_pages=4)
+    descs = [d for dd, _ in groups for d in dd]
+    assert next(d for d in descs if d.num_pages == 8).reg_mode == RegMode.DYN_MR
+    assert next(d for d in descs if d.num_pages == 1).reg_mode == RegMode.PRE_MR
+    groups = plan(BatchPolicy.HYBRID, reqs, RegMode.AUTO,
+                  kernel_space=True, crossover_pages=4)
+    assert all(d.reg_mode == RegMode.DYN_MR
+               for dd, _ in groups for d in dd)
+
+
+def test_hybrid_fewest_wqes_and_mmios_on_mixed_batch():
+    # mixed adjacent runs + scattered strays across two destinations:
+    # HYBRID must be simultaneously minimal on BOTH axes
+    reqs = ([wr(1, i) for i in range(6)] + [wr(1, 20), wr(1, 40)]
+            + [wr(2, j) for j in (0, 1, 2, 50)])
+    counts = {p: _counts(plan(p, reqs)) for p in BatchPolicy}
+    hw, hm = counts[BatchPolicy.HYBRID]
+    for p, (w, m) in counts.items():
+        assert hw <= w and hm <= m, p
+    assert hw < counts[BatchPolicy.DOORBELL][0]      # strictly fewer WQEs
+    assert hm < counts[BatchPolicy.BATCH_ON_MR][1]   # strictly fewer MMIOs
+
+
+# ---------------------------------------------------------------------------
+# batch submit path
+# ---------------------------------------------------------------------------
+
+def test_submit_many_drains_as_one_batch():
+    posted = []
+    mq = MergeQueue(posted.append, max_drain=64)
+    mq.submit_many([wr(1, i) for i in range(50)])
+    assert len(posted) == 1 and len(posted[0]) == 50
+    assert mq.submitted.value == 50
+    assert mq.drained_requests.value == 50
+    assert mq.solo_posts.value == 0
+
+
+def test_submit_many_respects_max_drain_windows():
+    posted = []
+    mq = MergeQueue(posted.append, max_drain=16)
+    mq.submit_many([wr(1, i) for i in range(40)])
+    assert [len(b) for b in posted] == [16, 16, 8]
+    assert mq.drains.value == 3

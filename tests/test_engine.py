@@ -5,9 +5,9 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import (BatchPolicy, BoxConfig, PollConfig, PollMode,
-                        RDMABox, RegionDirectory, RemotePagingSystem,
-                        RemoteRegion, PAGE_SIZE)
+from repro.core import (BatchPolicy, BatchTransferError, BoxConfig,
+                        PollConfig, PollMode, RDMABox, RegionDirectory,
+                        RemotePagingSystem, RemoteRegion, PAGE_SIZE)
 
 
 def make_box(poll_mode=PollMode.ADAPTIVE, scq=0, policy=BatchPolicy.HYBRID,
@@ -93,6 +93,112 @@ def test_admission_bounds_inflight():
 
 
 # ---------------------------------------------------------------------------
+# batched zero-copy hot path (write_pages / read_pages / BatchFuture)
+# ---------------------------------------------------------------------------
+
+def test_batch_write_read_roundtrip():
+    box = make_box()
+    try:
+        datas = [np.full(PAGE_SIZE, (i * 7 + 1) % 251, np.uint8)
+                 for i in range(48)]
+        box.write_pages(1, [(i, datas[i]) for i in range(48)]).wait(15)
+        buf = np.empty(48 * PAGE_SIZE, np.uint8)
+        views = [buf[i * PAGE_SIZE:(i + 1) * PAGE_SIZE] for i in range(48)]
+        assert box.read_pages(1, list(enumerate(views))).errors(15) == {}
+        for i in range(48):
+            assert np.array_equal(views[i], datas[i]), i
+        st = box.stats()
+        # the pre-formed vector drains in a few big merges, not 96 solos
+        assert st["merge"]["drained_requests"] >= 96
+        assert st["merge"]["merge_ratio"] > 1.0
+        assert st["pending_requests"] == 0
+    finally:
+        box.close()
+
+
+def test_batch_error_map_isolates_failed_pages():
+    box = make_box()          # donor regions are 4096 pages
+    try:
+        data = np.ones(PAGE_SIZE, np.uint8)
+        fut = box.write_pages(1, [(0, data), (5000, data)])
+        errs = fut.errors(10)
+        assert list(errs) == [5000]         # only the bad page, keyed by page
+        with pytest.raises(BatchTransferError) as ei:
+            fut.wait(10)
+        assert 5000 in ei.value.errors
+        out = np.empty(PAGE_SIZE, np.uint8)
+        box.read(1, 0, 1, out=out).wait(10)
+        assert np.array_equal(out, data)    # the good page still landed
+    finally:
+        box.close()
+
+
+def test_batch_callbacks_fire_before_waiter_released():
+    fired = []
+    box = make_box()
+    try:
+        data = np.ones(PAGE_SIZE, np.uint8)
+        cbs = [lambda wc, i=i: fired.append(i) for i in range(8)]
+        box.write_pages(1, [(i, data) for i in range(8)],
+                        callbacks=cbs).wait(10)
+        assert sorted(fired) == list(range(8))
+    finally:
+        box.close()
+
+
+def test_callback_errors_counted_not_raised():
+    box = make_box()
+    try:
+        data = np.ones(PAGE_SIZE, np.uint8)
+
+        def bad(wc):
+            raise ValueError("boom")
+
+        box.write(1, 0, data, callback=bad).wait(10)
+        box.write(1, 1, data, callback=bad).wait(10)
+        assert box.stats()["callback_errors"] == 2
+        out = np.empty(PAGE_SIZE, np.uint8)     # engine still healthy
+        box.read(1, 0, 1, out=out).wait(10)
+    finally:
+        box.close()
+
+
+def test_flush_event_driven_and_timeout_path():
+    box = make_box()
+    try:
+        data = np.ones(PAGE_SIZE, np.uint8)
+        release = threading.Event()
+
+        def block(wc):
+            release.wait(10)        # holds the completion path hostage
+
+        fut = box.write(1, 0, data, callback=block)
+        with pytest.raises(TimeoutError):
+            box.flush(timeout=0.2)  # transfer can't finish: must time out
+        release.set()
+        fut.wait(10)
+        box.flush(timeout=5)        # drains promptly once completed
+        assert box.stats()["pending_requests"] == 0
+    finally:
+        box.close()
+
+
+def test_region_vectorized_zero_copy_roundtrip():
+    region = RemoteRegion(1, 64)
+    a = np.full(PAGE_SIZE, 3, np.uint8)
+    b = np.full(2 * PAGE_SIZE, 4, np.uint8)
+    region.writev([(0, a), (10, b)])
+    out_a = np.empty(PAGE_SIZE, np.uint8)
+    out_b = np.empty(2 * PAGE_SIZE, np.uint8)
+    region.readv([(0, 1, out_a), (10, 2, out_b)])
+    assert np.array_equal(out_a, a) and np.array_equal(out_b, b)
+    with pytest.raises(IndexError):
+        region.readv([(63, 2, out_b)])      # second page out of range
+    with pytest.raises(IndexError):
+        region.writev([(-1, a)])
+
+
+# ---------------------------------------------------------------------------
 # remote paging (replication + failover + disk)
 # ---------------------------------------------------------------------------
 
@@ -125,6 +231,38 @@ def test_paging_disk_fallback_with_write_through():
         ps.fail_node(2)
         assert np.array_equal(ps.swap_in(5), data)   # disk tier
         assert ps.disk.reads >= 1
+    finally:
+        box.close()
+
+
+def test_paging_batch_swapout_and_prefetch():
+    box = make_box(peers=(1, 2, 3))
+    try:
+        ps = RemotePagingSystem(box, donor_pages=4096, replication=2)
+        rng = np.random.default_rng(1)
+        pages = {i: rng.integers(0, 255, PAGE_SIZE).astype(np.uint8)
+                 for i in range(32)}
+        ps.swap_out_batch(list(pages.items()))
+        bufs = {pid: np.empty(PAGE_SIZE, np.uint8) for pid in pages}
+        batch = ps.prefetch_batch([(pid, bufs[pid]) for pid in pages])
+        assert all(batch.resolve(10))
+        for pid, data in pages.items():
+            assert np.array_equal(bufs[pid], data), pid
+        # a replica marked stale by a failed acked write must not serve
+        # prefetches — corrupt the primary's bytes, mark it stale, and the
+        # batch read must come from the fresh secondary
+        d0, r0 = ps.replicas(1)[0]
+        box.directory.lookup(d0).write(r0, np.zeros(PAGE_SIZE, np.uint8))
+        with ps._lock:
+            ps._stale.add((d0, 1))
+        buf = np.empty(PAGE_SIZE, np.uint8)
+        assert ps.prefetch_batch([(1, buf)]).resolve(10) == [True]
+        assert np.array_equal(buf, pages[1])
+        # failed prefetches report False and leave failover to swap_in
+        ps.fail_node(ps.replicas(0)[0][0])
+        ps.fail_node(ps.replicas(0)[1][0])
+        buf = np.empty(PAGE_SIZE, np.uint8)
+        assert ps.prefetch_batch([(0, buf)]).resolve(5) == [False]
     finally:
         box.close()
 
