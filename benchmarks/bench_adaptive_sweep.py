@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.core import PollConfig, PollMode
 
-from .common import csv_row, make_box, run_workload
+from .common import csv_row, make_session, run_workload
 
 RETRIES = (1, 8, 32, 120, 512)
 
@@ -17,11 +17,12 @@ RETRIES = (1, 8, 32, 120, 512)
 def main() -> list:
     out = []
     for mr in RETRIES:
-        box = make_box(peers=(1,), channels=1, window=2 << 20, scale=2e-7,
-                       poll=PollConfig(mode=PollMode.ADAPTIVE, batch=16,
-                                       max_retry=mr))
+        sess = make_session(peers=(1,), channels=1, window=2 << 20,
+                            scale=2e-7,
+                            poll=PollConfig(mode=PollMode.ADAPTIVE, batch=16,
+                                            max_retry=mr))
         try:
-            res = run_workload(box, threads=2, ops_per_thread=384,
+            res = run_workload(sess.engine(), threads=2, ops_per_thread=384,
                                pattern="seq")
             p = res.stats["poll"]
             out.append(csv_row(
@@ -29,7 +30,7 @@ def main() -> list:
                 f"kops={res.kops_per_s:.1f};cpu_s={p['cpu_seconds']:.3f};"
                 f"wakeups={p['wakeups']};empty_polls={p['empty_polls']}"))
         finally:
-            box.close()
+            sess.close()
     return out
 
 

@@ -7,7 +7,7 @@ in-flight bytes — Fig. 8; the paper found ~7 MB and +29.9% IOPS).
 
 from __future__ import annotations
 
-from .common import csv_row, make_box, run_workload
+from .common import csv_row, make_session, run_workload
 
 THREADS = (1, 2, 4, 8, 16)
 
@@ -15,14 +15,14 @@ THREADS = (1, 2, 4, 8, 16)
 def run(window=None):
     rows = []
     for t in THREADS:
-        box = make_box(window=window, channels=4, scale=2e-5)
+        sess = make_session(window=window, channels=4, scale=2e-5)
         try:
-            res = run_workload(box, threads=t, ops_per_thread=256,
+            res = run_workload(sess.engine(), threads=t, ops_per_thread=256,
                                pattern="rand")
             rows.append((t, res.kops_per_s, res.stats["nic"]["cache_misses"],
                          res.stats["admission_blocked"]))
         finally:
-            box.close()
+            sess.close()
     return rows
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from repro.core import BatchPolicy, RegMode
 
-from .common import csv_row, make_box, run_workload
+from .common import csv_row, make_session, run_workload
 
 CASES = [
     ("single_preMR", BatchPolicy.SINGLE, RegMode.PRE_MR),
@@ -25,10 +25,11 @@ def run(threads: int = 6, ops: int = 384):
     rows = []
     table1 = {}
     for name, policy, reg in CASES:
-        box = make_box(policy=policy, reg=reg, window=1 << 20, scale=2e-5)
+        sess = make_session(policy=policy, reg=reg, window=1 << 20,
+                            scale=2e-5)
         try:
-            res = run_workload(box, threads=threads, ops_per_thread=ops,
-                               pattern="seq")
+            res = run_workload(sess.engine(), threads=threads,
+                               ops_per_thread=ops, pattern="seq")
             nic = res.stats["nic"]
             table1[name] = dict(rdma_ops=nic["rdma_ops"],
                                 mmio=nic["mmio_writes"],
@@ -36,7 +37,7 @@ def run(threads: int = 6, ops: int = 384):
             rows.append((name, res.kops_per_s, res.pct(99),
                          nic["rdma_ops"], nic["mmio_writes"]))
         finally:
-            box.close()
+            sess.close()
     return rows, table1
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from repro.core import NICCostModel
 
-from .common import csv_row, make_box, run_workload
+from .common import csv_row, make_session, run_workload
 
 SMALL_MSG = NICCostModel(wire_us_per_page=0.08)   # ~512B payloads
 
@@ -19,10 +19,10 @@ def main() -> list:
     out = []
     base = None
     for ch in (1, 2, 4, 8):
-        box = make_box(peers=(1, 2), channels=ch, window=4 << 20, scale=2e-5,
-                       cost=SMALL_MSG)
+        sess = make_session(peers=(1, 2), channels=ch, window=4 << 20,
+                            scale=2e-5, cost=SMALL_MSG)
         try:
-            res = run_workload(box, threads=6, ops_per_thread=256,
+            res = run_workload(sess.engine(), threads=6, ops_per_thread=256,
                                pattern="rand")
             if base is None:
                 base = res.kops_per_s
@@ -31,7 +31,7 @@ def main() -> list:
                 f"kops={res.kops_per_s:.1f};"
                 f"speedup_vs_1qp={res.kops_per_s/base:.2f}x"))
         finally:
-            box.close()
+            sess.close()
     return out
 
 

@@ -24,9 +24,8 @@ import time
 
 import numpy as np
 
-from repro.core import BoxConfig, PollConfig, PollMode, PAGE_SIZE
-from repro.fabric import FaultPlan, LinkConfig
-from repro.memory import MemoryCluster
+from repro import box
+from repro.core import PAGE_SIZE
 
 from .common import csv_row
 
@@ -35,25 +34,26 @@ PAGES = 48 if QUICK else 192
 SCALE = 5e-7
 
 
-def _cluster(replication=2, faults=None, first_responder=False,
+def _session(replication=2, faults=None, first_responder=False,
              write_through=False, link=None):
-    cfg = BoxConfig(nic_scale=SCALE,
-                    poll=PollConfig(mode=PollMode.ADAPTIVE, batch=16))
-    return MemoryCluster(num_donors=3, donor_pages=1 << 14, box_config=cfg,
-                         replication=replication, faults=faults,
-                         first_responder=first_responder,
-                         write_through_disk=write_through,
-                         link=link, evict_after=2)
+    spec = box.ClusterSpec(
+        num_donors=3, donor_pages=1 << 14, nic_scale=SCALE,
+        polling={"name": "adaptive", "params": {"batch": 16}},
+        replication=replication, faults=faults,
+        first_responder=first_responder, write_through_disk=write_through,
+        link=link, evict_after=2)
+    return box.open(spec)
 
 
 def run_scenario(name: str, *, replication=2, faults=None,
                  first_responder=False, write_through=False, link=None,
                  crash_at=None, expect_zero_disk_reads=False,
                  expect_disk_reads=False):
-    c = _cluster(replication=replication, faults=faults,
+    c = _session(replication=replication, faults=faults,
                  first_responder=first_responder, write_through=write_through,
                  link=link)
     try:
+        pager = c.pager()
         rng = np.random.default_rng(0)
         pages = {i: rng.integers(0, 255, PAGE_SIZE).astype(np.uint8)
                  for i in range(PAGES)}
@@ -61,19 +61,19 @@ def run_scenario(name: str, *, replication=2, faults=None,
         for pid, data in pages.items():
             if crash_at is not None and pid == crash_at:
                 c.crash_donor(1)                    # scripted mid-run crash
-            c.paging.swap_out(pid, data, wait=True)
+            pager.swap_out(pid, data, wait=True)
         out_t = time.perf_counter() - t0
 
         lat = []
         t0 = time.perf_counter()
         for pid, data in pages.items():
             t1 = time.perf_counter()
-            got = c.paging.swap_in(pid)
+            got = pager.swap_in(pid)
             lat.append((time.perf_counter() - t1) * 1e3)
             assert np.array_equal(got, data), \
                 f"{name}: page {pid} corrupted"     # zero-corruption criterion
         in_t = time.perf_counter() - t0
-        st = c.paging.stats()
+        st = pager.snapshot()
         if expect_zero_disk_reads:
             assert st["disk_reads"] == 0, f"{name}: hit disk: {st}"
         if expect_disk_reads:
@@ -95,8 +95,8 @@ SCENARIOS = {
     "healthy": dict(),
     "donor_crash": dict(crash_at=PAGES // 2, expect_zero_disk_reads=True),
     "straggler": dict(
-        faults=FaultPlan().slow(1, 50.0), first_responder=True,
-        link=LinkConfig(latency_us=20.0)),
+        faults=[{"kind": "slow", "node": 1, "factor": 50.0}],
+        first_responder=True, link={"latency_us": 20.0}),
     "r1_crash": dict(replication=1, write_through=True,
                      crash_at=PAGES // 2, expect_disk_reads=True),
 }

@@ -1,10 +1,13 @@
 """Hot-path microbenchmark: per-page vs batched submit→complete.
 
-Same payload both ways — N pages to one donor — issued either through the
-per-page API (one ``WorkRequest`` + one ``TransferFuture`` + one
-futures-dict insert per page, one event wait per page) or through the
-batched zero-copy API (``write_pages``: the whole vector enters the merge
-queue under a single lock acquisition and resolves to ONE ``BatchFuture``).
+Same payload both ways — N pages into one ``RemoteBuffer`` — issued
+either through the per-page API (``buf.write``: one ``WorkRequest`` + one
+``TransferFuture`` + one futures-dict insert per page, one event wait per
+page) or through the batched zero-copy API (``buf.writev``: the whole
+vector enters the merge queue under a single lock acquisition and
+resolves to ONE ``BatchFuture``). Both ride the public ``repro.box``
+surface: a session heap hands each thread its own contiguous remote
+buffer on the single donor.
 
 The NIC virtual clock is scaled so small (``SCALE``) that modeled hardware
 time is negligible: what the wall clock measures is host-side *engine*
@@ -31,7 +34,7 @@ import time
 
 from repro.core import PAGE_SIZE
 
-from .common import DATA, csv_row, make_box
+from .common import DATA, csv_row, make_session
 
 QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
 # quick stays big enough that fixed costs don't dominate — the 4-thread
@@ -43,21 +46,24 @@ MIN_SPEEDUP = 3.0
 
 
 def _run(api: str, threads: int) -> dict:
-    box = make_box(peers=(1,), scale=SCALE, donor_pages=1 << 15)
+    sess = make_session(peers=(1,), scale=SCALE, donor_pages=1 << 15,
+                        heap_pages=1 << 15)
     try:
         total = threads * PAGES_PER_THREAD
+        heap = sess.heap()
+        bufs = [heap.alloc(PAGES_PER_THREAD * PAGE_SIZE)
+                for _ in range(threads)]
 
         def per_page(tid: int) -> None:
-            base = tid * PAGES_PER_THREAD
-            futs = [box.write(1, base + i, DATA)
+            buf = bufs[tid]
+            futs = [buf.write(DATA, page_offset=i)
                     for i in range(PAGES_PER_THREAD)]
             for f in futs:
                 f.wait(120)
 
         def batch(tid: int) -> None:
-            base = tid * PAGES_PER_THREAD
-            box.write_pages(
-                1, [(base + i, DATA) for i in range(PAGES_PER_THREAD)],
+            bufs[tid].writev(
+                [(i, DATA) for i in range(PAGES_PER_THREAD)],
             ).wait(120)
 
         worker = batch if api == "batch" else per_page
@@ -69,19 +75,20 @@ def _run(api: str, threads: int) -> dict:
         for t in ts:
             t.join()
         wall = time.perf_counter() - t0
-        modeled_s = box.nic.busy_snapshot()["critical_us"] * SCALE
-        st = box.stats()
+        modeled_s = sess.engine().nic.busy_snapshot()["critical_us"] * SCALE
+        st = sess.stats()
+        nic = st["nic"]["0"]
         return {
             "ops_per_s": total / wall,
             "gbytes_per_s": total * PAGE_SIZE / wall / 1e9,
             "overhead": wall / max(modeled_s, 1e-12),
             "wall_s": wall,
-            "wqes": st["nic"]["wqes_posted"],
-            "mmios": st["nic"]["mmio_writes"],
-            "merge_ratio": st["merge"]["merge_ratio"],
+            "wqes": nic["wqes_posted"],
+            "mmios": nic["mmio_writes"],
+            "merge_ratio": st["client"]["0"]["box"]["merge"]["merge_ratio"],
         }
     finally:
-        box.close()
+        sess.close()
 
 
 def main():

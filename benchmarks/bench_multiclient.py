@@ -28,9 +28,8 @@ import time
 
 import numpy as np
 
-from repro.core import BoxConfig, CongestionAwareHook, PAGE_SIZE
-from repro.fabric import LinkConfig
-from repro.memory import MemoryCluster
+from repro import box
+from repro.core import PAGE_SIZE
 
 from .common import csv_row
 
@@ -47,25 +46,26 @@ def _page(seed: int) -> np.ndarray:
         0, 255, PAGE_SIZE).astype(np.uint8)
 
 
-def _client_workload(cluster: MemoryCluster, idx: int, pages: int,
+def _client_workload(session: box.Session, idx: int, pages: int,
                      out: dict) -> None:
     """One client's swap-out + verify swap-in pass (its own page space)."""
-    paging = cluster.pagings[idx]
+    pager = session.pager(idx)
     datas = {pid: _page(1000 * idx + pid) for pid in range(pages)}
     t0 = time.perf_counter()
     for pid, data in datas.items():
-        paging.swap_out(pid, data, wait=True)
+        pager.swap_out(pid, data, wait=True)
     for pid, data in datas.items():
-        got = paging.swap_in(pid)
+        got = pager.swap_in(pid)
         assert np.array_equal(got, data), \
             f"client {idx}: page {pid} corrupted"   # zero-corruption criterion
     out[idx] = 2 * pages / (time.perf_counter() - t0)
 
 
 def run_shared(num_clients: int, pages: int) -> dict:
-    cfg = BoxConfig(nic_scale=SCALE)
-    with MemoryCluster(num_donors=1, donor_pages=1 << 14, box_config=cfg,
-                       replication=1, num_clients=num_clients) as c:
+    spec = box.ClusterSpec(num_donors=1, donor_pages=1 << 14,
+                           nic_scale=SCALE, replication=1,
+                           num_clients=num_clients)
+    with box.open(spec) as c:
         rates: dict = {}
         ts = [threading.Thread(target=_client_workload, args=(c, i, pages, rates))
               for i in range(num_clients)]
@@ -74,7 +74,7 @@ def run_shared(num_clients: int, pages: int) -> dict:
         for t in ts:
             t.join()
         donor = c.donors[0]
-        service = c.fabric.stats()["service"].get(donor, {})
+        service = c.stats()["fabric"]["service"].get(donor, {})
         return {"rates": rates, "service": service}
 
 
@@ -105,32 +105,27 @@ def scenario_contention_cost() -> list:
 
 
 def scenario_congestion_window() -> list:
-    hooks: list = []
-
-    def factory() -> CongestionAwareHook:
-        hook = CongestionAwareHook()
-        hooks.append(hook)
-        return hook
-
-    cfg = BoxConfig(nic_scale=1e-7)
+    # congestion-aware admission selected by policy-registry name
+    spec = box.ClusterSpec(num_donors=1, donor_pages=1 << 14,
+                           nic_scale=1e-7, replication=1, num_clients=1,
+                           link={"latency_us": 300.0},
+                           admission="congestion")
     n = max(PAGES // 2, 48)
-    with MemoryCluster(num_donors=1, donor_pages=1 << 14, box_config=cfg,
-                       replication=1, num_clients=1,
-                       link=LinkConfig(latency_us=300.0),
-                       admission_hook_factory=factory) as c:
-        hook = hooks[0]
+    with box.open(spec) as c:
+        pager = c.pager()
+        hook = c.engine().admission.hook
         donor = c.donors[0]
         data = _page(7)
         for pid in range(n):                      # healthy: calibrate
-            c.paging.swap_out(pid, data, wait=True)
+            pager.swap_out(pid, data, wait=True)
         healthy = hook.window_fraction
         c.congest_path(0, donor, 20.0)            # episode starts (both dirs)
         for pid in range(n):
-            c.paging.swap_out(pid, data, wait=True)
+            pager.swap_out(pid, data, wait=True)
         congested = hook.window_fraction
         c.clear_path(0, donor)                    # episode ends
         for pid in range(2 * n):
-            c.paging.swap_out(pid % n, data, wait=True)
+            pager.swap_out(pid % n, data, wait=True)
         recovered = hook.window_fraction
         assert congested < healthy, \
             f"window never shrank under congestion: {hook.snapshot()}"

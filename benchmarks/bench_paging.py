@@ -14,10 +14,9 @@ import time
 
 import numpy as np
 
-from repro.core import (BatchPolicy, PollConfig, PollMode, RegMode,
-                        RemotePagingSystem, PAGE_SIZE)
+from repro.core import PAGE_SIZE, BatchPolicy, PollConfig, PollMode, RegMode
 
-from .common import csv_row, make_box
+from .common import csv_row, make_session
 
 CONFIGS = {
     # nbdX uses Accelio: doorbell batching, event-batch polling, no
@@ -40,11 +39,12 @@ CONFIGS = {
 
 
 def run(name: str, cfg: dict, threads: int = 4, pages: int = 256):
-    box = make_box(peers=(1, 2, 3), policy=cfg["policy"], reg=cfg["reg"],
-                   poll=cfg["poll"], window=cfg["window"], scale=5e-6)
+    sess = make_session(peers=(1, 2, 3), policy=cfg["policy"],
+                        reg=cfg["reg"], poll=cfg["poll"],
+                        window=cfg["window"], scale=5e-6,
+                        replication=cfg["replication"])
     try:
-        ps = RemotePagingSystem(box, donor_pages=1 << 15,
-                                replication=cfg["replication"])
+        ps = sess.pager()
         data = np.arange(PAGE_SIZE, dtype=np.uint8)
         futs_all, lock = [], threading.Lock()
 
@@ -71,15 +71,15 @@ def run(name: str, cfg: dict, threads: int = 4, pages: int = 256):
             for i in range(0, pages, 8):
                 ps.swap_in(tid * pages + i)
         in_t = time.perf_counter() - t0
-        st = box.stats()
+        st = sess.stats()
         return {
             "swapout_kpages_s": threads * pages / out_t / 1e3,
             "swapin_kpages_s": threads * (pages // 8) / in_t / 1e3,
-            "rdma_ops": st["nic"]["rdma_ops"],
-            "requests": st["merge"]["submitted"],
+            "rdma_ops": st["nic"]["0"]["rdma_ops"],
+            "requests": st["client"]["0"]["box"]["merge"]["submitted"],
         }
     finally:
-        box.close()
+        sess.close()
 
 
 def main() -> list:

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 from repro.core import PollConfig, PollMode
 
-from .common import csv_row, make_box, run_workload
+from .common import csv_row, make_session, run_workload
 
 MODES = [
     ("busy", PollConfig(mode=PollMode.BUSY)),
@@ -26,16 +26,16 @@ def run(num_peers: int):
     rows = {}
     peers = tuple(range(1, num_peers + 1))
     for name, poll in MODES:
-        box = make_box(peers=peers, poll=poll, channels=1, window=4 << 20,
-                       scale=2e-7, app_handler_cost=200)
+        sess = make_session(peers=peers, poll=poll, channels=1,
+                            window=4 << 20, scale=2e-7, app_handler_cost=200)
         try:
-            res = run_workload(box, threads=4, ops_per_thread=192,
+            res = run_workload(sess.engine(), threads=4, ops_per_thread=192,
                                pattern="seq")
             p = res.stats["poll"]
             rows[name] = (res.kops_per_s, p["cpu_seconds"], p["wakeups"],
                           p["empty_polls"])
         finally:
-            box.close()
+            sess.close()
     return rows
 
 

@@ -7,7 +7,7 @@ every size. User space: per-page PTE/translation costs give a crossover
 
 from __future__ import annotations
 
-from repro.core import NICCostModel, PAGE_SIZE
+from repro.core import PAGE_SIZE, NICCostModel
 from repro.core.registration import cost_curves
 
 from .common import csv_row

@@ -18,8 +18,7 @@ import numpy as np
 
 from repro.core import BatchPolicy, PollConfig, PollMode, RegMode
 
-from .common import csv_row, make_box
-from repro.memory import PagedKVCache
+from .common import csv_row, make_session
 
 CONFIGS = {
     "octopus_like": dict(policy=BatchPolicy.SINGLE, reg=RegMode.PRE_MR,
@@ -42,12 +41,12 @@ def run(cfg: dict, seqs: int = 12, tokens: int = 192):
     # channels=1 bounds busy-polling thread count: on this 1-core host
     # the GIL exaggerates busy-poll CPU contention far beyond the paper's
     # 1.2-6x gaps (noted in EXPERIMENTS.md)
-    box = make_box(peers=(1, 2), policy=cfg["policy"], reg=cfg["reg"],
-                   poll=cfg["poll"], window=cfg["window"], channels=1,
-                   kernel_space=False, scale=5e-5)
+    sess = make_session(peers=(1, 2), policy=cfg["policy"], reg=cfg["reg"],
+                        poll=cfg["poll"], window=cfg["window"], channels=1,
+                        kernel_space=False, scale=5e-5,
+                        heap_pages=1 << 15)   # whole region = KV spill arena
     try:
-        kv = PagedKVCache(num_pages=1024, page_tokens=16, kv_features=64,
-                          box=box)
+        kv = sess.kv_store(num_pages=1024, page_tokens=16, kv_features=64)
         rng = np.random.default_rng(0)
         for s in range(seqs):
             kv.add_sequence(s)
@@ -56,12 +55,10 @@ def run(cfg: dict, seqs: int = 12, tokens: int = 192):
 
         def mover(lo):
             for s in range(lo, seqs, 4):
-                kv_lock and None
-                kv.spill_sequence(s, box.peers[s % 2])
+                kv.spill(s, donor=sess.donors[s % 2])
             for s in range(lo, seqs, 4):
-                kv.fetch_sequence(s, box.peers[s % 2])
+                kv.fetch(s)
 
-        kv_lock = None
         t0 = time.perf_counter()
         ts = [_th.Thread(target=mover, args=(i,)) for i in range(4)]
         for t in ts:
@@ -70,10 +67,9 @@ def run(cfg: dict, seqs: int = 12, tokens: int = 192):
             t.join()
         dt = time.perf_counter() - t0
         moved_mb = 2 * seqs * (tokens * 64 * 4) / 1e6
-        st = box.stats()
-        return moved_mb / dt, st["nic"]["rdma_ops"]
+        return moved_mb / dt, sess.stats()["nic"]["0"]["rdma_ops"]
     finally:
-        box.close()
+        sess.close()
 
 
 def main() -> list:

@@ -1,7 +1,14 @@
-"""Shared benchmark harness: cluster fixture + workload generators.
+"""Shared benchmark harness: session fixture + workload generators.
+
+All benchmarks build their cluster through ``repro.box.open`` — a
+``ClusterSpec`` with bare donor regions (``donor_nics=False``, the
+microbenchmark fixture: transfers complete client-side so the numbers
+isolate the client engine) and policies selected by registry name. The
+page-addressed workload generators drive ``session.engine()``, the raw
+node-level engine capability.
 
 Timing model: the simulated NIC paces virtual microseconds against the
-real clock (BoxConfig.nic_scale seconds per vus), so completed-ops/s are
+real clock (``nic_scale`` seconds per vus), so completed-ops/s are
 comparable across configurations; event counts (WQEs, MMIOs, cache
 misses, wakeups) are exact.
 """
@@ -10,45 +17,62 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core import (BatchPolicy, BoxConfig, NICCostModel, PollConfig,
-                        RDMABox, RegionDirectory, RegMode,
-                        RemoteRegion, PAGE_SIZE)
+from repro import box
+from repro.core import (
+    PAGE_SIZE,
+    BatchPolicy,
+    NICCostModel,
+    PollConfig,
+    RDMABox,
+    RegMode,
+)
 
 DATA = np.arange(PAGE_SIZE, dtype=np.uint8)
 
 
-def make_box(peers: Sequence[int] = (1, 2, 3), *,
-             policy: BatchPolicy = BatchPolicy.HYBRID,
-             reg: RegMode = RegMode.AUTO,
-             poll: Optional[PollConfig] = None,
-             window: Optional[int] = 8 << 20,
-             channels: int = 4,
-             kernel_space: bool = True,
-             scale: float = 2e-7,
-             donor_pages: int = 1 << 15,
-             app_handler_cost: int = 0,
-             cost: Optional[NICCostModel] = None) -> RDMABox:
-    directory = RegionDirectory()
-    for n in peers:
-        directory.register(RemoteRegion(n, donor_pages))
+def polling_ref(poll: PollConfig) -> dict:
+    """A PollConfig as a polling-policy registry reference."""
+    return {"name": poll.mode.value,
+            "params": {"batch": poll.batch, "max_retry": poll.max_retry,
+                       "scq_count": poll.scq_count,
+                       "scq_threads_per_cq": poll.scq_threads_per_cq,
+                       "hybrid_timer_us": poll.hybrid_timer_us}}
+
+
+def make_session(peers: Sequence[int] = (1, 2, 3), *,
+                 policy: BatchPolicy = BatchPolicy.HYBRID,
+                 reg: RegMode = RegMode.AUTO,
+                 poll: Optional[PollConfig] = None,
+                 window: Optional[int] = 8 << 20,
+                 channels: int = 4,
+                 kernel_space: bool = True,
+                 scale: float = 2e-7,
+                 donor_pages: int = 1 << 15,
+                 heap_pages: int = 0,
+                 replication: int = 1,
+                 app_handler_cost: int = 0,
+                 cost: Optional[NICCostModel] = None) -> box.Session:
+    """One-client session over bare donor regions 1..N (node 0 client)."""
     handler = None
     if app_handler_cost:
         def handler(wc, _n=app_handler_cost):
             x = 0
             for i in range(_n):      # run-to-completion CPU work (holds GIL)
                 x += i * i
-    cfg = BoxConfig(batch_policy=policy, reg_mode=reg,
-                    poll=poll or PollConfig(),
-                    window_bytes=window, channels_per_peer=channels,
-                    kernel_space=kernel_space, nic_scale=scale,
-                    nic_cost=cost or NICCostModel(),
-                    app_handler=handler)
-    return RDMABox(0, directory, list(peers), config=cfg)
+    spec = box.ClusterSpec(
+        num_donors=len(peers), donor_pages=donor_pages, donor_nics=False,
+        heap_pages=heap_pages, replication=replication,
+        window_bytes=window, channels_per_peer=channels,
+        kernel_space=kernel_space, nic_scale=scale,
+        reg_mode=reg.value, batching=policy.value,
+        polling=polling_ref(poll or PollConfig()),
+        nic_cost=asdict(cost) if cost is not None else None)
+    return box.open(spec, app_handler=handler)
 
 
 @dataclass
@@ -67,15 +91,15 @@ class WorkloadResult:
             self.latencies_us) else 0.0
 
 
-def run_workload(box: RDMABox, *, threads: int = 4, ops_per_thread: int = 256,
+def run_workload(engine: RDMABox, *, threads: int = 4,
+                 ops_per_thread: int = 256,
                  pattern: str = "seq", read_frac: float = 0.0,
                  burst: int = 8, seed: int = 0) -> WorkloadResult:
     """Each thread issues page writes/reads; ``seq`` gives each thread its
     own ascending page range (mergeable — the swap-out pattern), ``rand``
     scatters uniformly (unmergeable)."""
-    rng = np.random.default_rng(seed)
-    peers = box.peers
-    donor_pages = box.directory.lookup(peers[0]).num_pages
+    peers = engine.peers
+    donor_pages = engine.directory.lookup(peers[0]).num_pages
     futs_all: List = []
     lock = threading.Lock()
 
@@ -90,9 +114,9 @@ def run_workload(box: RDMABox, *, threads: int = 4, ops_per_thread: int = 256,
                 page = int(r.integers(0, donor_pages))
             if r.random() < read_frac:
                 out = np.empty(PAGE_SIZE, np.uint8)
-                futs.append(box.read(peer, page, 1, out=out))
+                futs.append(engine.read(peer, page, 1, out=out))
             else:
-                futs.append(box.write(peer, page, DATA))
+                futs.append(engine.write(peer, page, DATA))
         with lock:
             futs_all.extend(futs)
 
@@ -108,7 +132,7 @@ def run_workload(box: RDMABox, *, threads: int = 4, ops_per_thread: int = 256,
         lat.append(wc.latency_us)
     wall = time.perf_counter() - t0
     return WorkloadResult(ops=len(futs_all), wall_s=wall,
-                          latencies_us=np.asarray(lat), stats=box.stats())
+                          latencies_us=np.asarray(lat), stats=engine.stats())
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

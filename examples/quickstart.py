@@ -1,8 +1,8 @@
-"""Quickstart: the RDMAbox node-level abstraction in 60 lines.
+"""Quickstart: the ``repro.box`` public API in 70 lines.
 
-Creates a 3-donor remote-memory cluster, writes/reads pages through the
-load-aware batching engine, shows the merge/admission stats, and survives
-a donor failure via replication.
+One declarative spec opens a 3-donor remote-memory cluster; the session
+hands out handle-based remote buffers, the replicated pager, and one
+composed stats tree — with the load-aware batching engine underneath.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,55 +11,61 @@ import threading
 
 import numpy as np
 
-from repro.core import BoxConfig, PAGE_SIZE
-from repro.memory import MemoryCluster
+from repro import box
 
 # modest admission window + realistic link speed so the burst below
-# actually stacks the merge queue (light load never batches — by design)
-cfg = BoxConfig(window_bytes=256 << 10, nic_scale=2e-7)
+# actually stacks the merge queue (light load never batches — by design);
+# congestion-aware admission selected by registry name
+spec = box.ClusterSpec(num_donors=3, donor_pages=8192, heap_pages=1024,
+                       replication=2, window_bytes=256 << 10,
+                       nic_scale=2e-7, admission="congestion")
 
-with MemoryCluster(num_donors=3, donor_pages=8192, box_config=cfg) as cluster:
-    box, paging = cluster.box, cluster.paging
-
-    # --- 1. one-sided page writes/reads with futures -----------------------
-    page = np.arange(PAGE_SIZE, dtype=np.uint8)
-    fut = box.write(cluster.donors[0], 42, page)
-    fut.wait()
-    out = np.empty(PAGE_SIZE, np.uint8)
-    box.read(cluster.donors[0], 42, 1, out=out).wait()
-    assert np.array_equal(out, page)
-    print("1. write/read roundtrip OK")
+with box.open(spec) as session:
+    # --- 1. handle-based remote memory with futures ------------------------
+    heap = session.heap()
+    buf = heap.alloc(4 * box.PAGE_SIZE)
+    data = np.arange(4 * box.PAGE_SIZE, dtype=np.uint8)
+    buf.write(data).wait()             # one WorkRequest, zero-copy
+    assert np.array_equal(buf.read(), data)
+    print(f"1. alloc/write/read roundtrip OK "
+          f"({buf.num_pages} pages on donor {buf.donor})")
 
     # --- 2. load-aware batching: a burst of adjacent pages merges ----------
-    def burst(tid):
-        futs = [box.write(cluster.donors[0], 1000 + tid * 128 + i, page)
-                for i in range(128)]
-        for f in futs:
-            f.wait()
+    page = np.arange(box.PAGE_SIZE, dtype=np.uint8)
+    bufs = [heap.alloc(128 * box.PAGE_SIZE) for _ in range(6)]
 
-    threads = [threading.Thread(target=burst, args=(t,)) for t in range(6)]
+    def burst(b):
+        # one batched vector: single submit-lock acquisition, ONE future
+        b.writev([(i, page) for i in range(128)]).wait()
+
+    threads = [threading.Thread(target=burst, args=(b,)) for b in bufs]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
-    st = box.stats()
-    print(f"2. {st['merge']['submitted']} requests -> "
-          f"{st['nic']['rdma_ops']} RDMA ops "
-          f"({st['merge']['submitted']/st['nic']['rdma_ops']:.1f}x fewer WQEs), "
-          f"{st['nic']['mmio_writes']} MMIOs, "
-          f"admission blocked {st['admission_blocked']} times")
+    st = session.stats()
+    merge = st["client"]["0"]["box"]["merge"]
+    nic = st["nic"]["0"]
+    admission = st["client"]["0"]["box"]["admission"]
+    print(f"2. {merge['submitted']} requests -> "
+          f"{nic['rdma_ops']} RDMA ops "
+          f"({merge['submitted']/nic['rdma_ops']:.1f}x fewer WQEs), "
+          f"{nic['mmio_writes']} MMIOs, "
+          f"admission blocked {admission['blocked']} times")
 
     # --- 3. remote paging with replication + failover ----------------------
-    paging.swap_out(7, page, wait=True)
-    primary = paging.replicas(7)[0][0]
-    paging.fail_node(primary)          # kill the primary donor
-    back = paging.swap_in(7)           # read served by the surviving replica
+    pager = session.pager()
+    pager.swap_out(7, page, wait=True)
+    primary = pager.replicas(7)[0][0]
+    pager.fail_node(primary)           # kill the primary donor
+    back = pager.swap_in(7)            # read served by the surviving replica
     assert np.array_equal(back, page)
     print(f"3. donor {primary} failed; replica read OK")
 
-    # --- 4. adaptive polling stats ------------------------------------------
-    p = st["poll"]
-    print(f"4. adaptive polling: {p['handled']} completions in "
-          f"{p['wakeups']} wakeups ({p['handled']/max(p['wakeups'],1):.0f} "
-          f"WCs drained per interrupt)")
+    # --- 4. one stats tree, dotted access -----------------------------------
+    flat = session.stats(flat=True)
+    print(f"4. adaptive polling: {flat['client.0.box.poll.handled']} "
+          f"completions in {flat['client.0.box.poll.wakeups']} wakeups; "
+          f"window fraction "
+          f"{flat['client.0.box.admission.hook.window_fraction']:.2f}")
 print("QUICKSTART OK")

@@ -10,8 +10,8 @@ import time
 
 import numpy as np
 
+from repro import box
 from repro.core import PAGE_SIZE
-from repro.memory import MemoryCluster
 
 LOCAL_BUDGET = 64          # pages the "host" may keep
 WORKING_SET = 512          # pages the app touches
@@ -19,8 +19,9 @@ WORKING_SET = 512          # pages the app touches
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    with MemoryCluster(num_donors=3, donor_pages=1 << 14) as cluster:
-        paging = cluster.paging
+    spec = box.ClusterSpec(num_donors=3, donor_pages=1 << 14)
+    with box.open(spec) as session:
+        paging = session.pager()
         local: dict[int, np.ndarray] = {}
         content = {}
 
@@ -45,7 +46,7 @@ def main() -> None:
                 victim, vdata = next(iter(local.items()))
                 del local[victim]
                 paging.swap_out(victim, vdata)
-        cluster.box.flush()
+        session.flush()
         dt = time.perf_counter() - t0
 
         # verify a few pages survived the round trips
@@ -55,16 +56,19 @@ def main() -> None:
                 data = paging.swap_in(pid)
             assert np.array_equal(data[:8], content[pid]), f"page {pid} corrupt"
 
-        st = cluster.box.stats()
+        st = session.stats()
+        merge = st["client"]["0"]["box"]["merge"]
+        nic = st["nic"]["0"]
+        blocked = st["client"]["0"]["box"]["admission"]["blocked"]
         print(f"{len(accesses)} accesses: {hits} hits, {misses} faults, "
               f"{evictions} evictions in {dt:.2f}s")
-        print(f"engine: {st['merge']['submitted']} requests -> "
-              f"{st['nic']['rdma_ops']} RDMA ops, "
-              f"{st['nic']['cache_misses']} WQE-cache misses, "
-              f"window blocked {st['admission_blocked']}x")
+        print(f"engine: {merge['submitted']} requests -> "
+              f"{nic['rdma_ops']} RDMA ops, "
+              f"{nic['cache_misses']} WQE-cache misses, "
+              f"window blocked {blocked}x")
 
         # donor failure mid-run: replication keeps every page readable
-        paging.fail_node(cluster.donors[0])
+        paging.fail_node(session.donors[0])
         ok = sum(1 for pid in list(content)[:50]
                  if pid not in local and
                  np.array_equal(paging.swap_in(pid)[:8], content[pid]))

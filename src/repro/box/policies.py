@@ -1,0 +1,111 @@
+"""Pluggable policy registries for the ``repro.box`` surface.
+
+Four policy kinds cover the engine's decision points; a ``ClusterSpec``
+selects each by name (plus a parameter dict), so swapping a policy is a
+config change, not rewiring:
+
+* ``admission``  — the window-scaling hook (per-client instance).
+  Built-ins: ``static`` (the paper prototype's fixed window),
+  ``congestion`` (AIMD on latency EWMA + ECN-style fabric marks).
+* ``polling``    — the WC-handling strategy (returns a ``PollConfig``).
+  Built-ins: the paper's six (``adaptive``, ``busy``, ``event``,
+  ``event_batch``, ``scq``, ``hybrid_timer``).
+* ``batching``   — how drained merge-queue batches become NIC postings.
+  Built-ins: ``single``, ``doorbell``, ``batch_on_mr``, ``hybrid``.
+* ``placement``  — the paging layer's replica layout.
+  Built-in: ``striped`` (the paper's layout).
+
+Third-party policies register via the decorator::
+
+    @register_policy("placement", "rack-aware")
+    class RackAware:
+        def capacity_pages(self, ps): ...
+        def replicas(self, ps, page_id): ...
+
+and become selectable as ``ClusterSpec(placement="rack-aware")``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from ..core.admission import AdmissionHook, CongestionAwareHook
+from ..core.batching import BatchPolicy
+from ..core.paging import StripedPlacement
+from ..core.polling import PollConfig, PollMode
+from .spec import PolicySpec
+
+POLICY_KINDS = ("admission", "polling", "batching", "placement")
+
+_REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {
+    kind: {} for kind in POLICY_KINDS
+}
+
+
+def register_policy(kind: str, name: str) -> Callable:
+    """Class/function decorator registering a policy factory under
+    ``kind``/``name``. The factory is called with the spec's parameter
+    dict as keyword arguments each time a session needs an instance."""
+    if kind not in _REGISTRIES:
+        raise ValueError(f"unknown policy kind {kind!r} "
+                         f"(one of {POLICY_KINDS})")
+
+    def deco(factory: Callable[..., Any]) -> Callable[..., Any]:
+        _REGISTRIES[kind][name] = factory
+        return factory
+
+    return deco
+
+
+def policy_names(kind: str) -> List[str]:
+    """Registered names for one policy kind."""
+    return sorted(_REGISTRIES[kind])
+
+
+def create_policy(kind: str, ref: PolicySpec) -> Any:
+    """Instantiate the policy ``ref`` names (a fresh instance per call —
+    admission hooks are stateful and must not be shared across clients)."""
+    ref = PolicySpec.coerce(ref)
+    try:
+        factory = _REGISTRIES[kind][ref.name]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} policy {ref.name!r}; registered: "
+            f"{policy_names(kind)}") from None
+    return factory(**ref.params)
+
+
+# ---- built-in admission policies ------------------------------------------
+@register_policy("admission", "static")
+def _static_admission() -> Optional[AdmissionHook]:
+    """The prototype's fixed window: no hook at all."""
+    return None
+
+
+register_policy("admission", "congestion")(CongestionAwareHook)
+
+
+# ---- built-in polling policies --------------------------------------------
+def _poll_factory(mode: PollMode) -> Callable[..., PollConfig]:
+    def make(**params: Any) -> PollConfig:
+        return PollConfig(mode=mode, **params)
+    return make
+
+
+for _mode in PollMode:
+    register_policy("polling", _mode.value)(_poll_factory(_mode))
+
+
+# ---- built-in batching policies -------------------------------------------
+def _batch_factory(policy: BatchPolicy) -> Callable[..., BatchPolicy]:
+    def make() -> BatchPolicy:
+        return policy
+    return make
+
+
+for _policy in BatchPolicy:
+    register_policy("batching", _policy.value)(_batch_factory(_policy))
+
+
+# ---- built-in placement policies ------------------------------------------
+register_policy("placement", "striped")(StripedPlacement)

@@ -1,0 +1,332 @@
+"""The ``Session`` facade — one object owning a whole cluster's lifetime.
+
+``repro.box.open(spec)`` compiles a declarative ``ClusterSpec`` into a
+running fabric (per-node NICs, links, fault state), one engine per
+client, and the per-client paging/heap layout, then hands back a
+``Session`` that:
+
+* owns lifecycle — context manager, idempotent ``close()`` that cascades
+  to every capability object and fails in-flight transfers with
+  ``ClosedError`` instead of letting waiters hit timeouts;
+* hands out typed capabilities (``heap``/``pager``/``tensors``/
+  ``kv_store``; ``engine`` exposes the raw node-level ``RDMABox`` for
+  page-addressed workloads and benchmarks);
+* composes ONE stats tree (``stats()``) with stable namespaces —
+  ``fabric.*`` (links, donor-side service, faults), ``nic.<node>.*``
+  (per-NIC counters), ``client.<i>.box.*`` (per-engine merge/admission/
+  poll state, plus ``client.<i>.paging`` / ``.heap`` / ``.tensors``),
+  and ``paging.*`` (client 0's paging view) — replacing the divergent
+  per-class dicts of the pre-``repro.box`` surface;
+* drives scenario choreography (``crash_donor``/``recover_donor``/
+  ``congest_path``/``clear_path``) against the fabric's fault state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any, Callable, Dict, List, Optional, Union
+
+import numpy as np
+
+from ..core.admission import AdmissionHook
+from ..core.descriptors import PAGE_SIZE, RegMode
+from ..core.errors import ClosedError
+from ..core.nic import NICCostModel
+from ..core.paging import DiskTier, RemotePagingSystem
+from ..core.rdmabox import BoxConfig, RDMABox
+from ..fabric import Fabric, FaultPlan, LinkConfig
+from .handles import KVStore, Pager, RemoteHeap, TensorStore
+from .policies import create_policy
+from .spec import ClusterSpec
+from .stats import flatten_stats
+
+# keyword arguments of open() that are Session escape hatches (imperative
+# objects the declarative spec cannot carry), not ClusterSpec fields
+ESCAPE_HATCHES = ("box_config", "fault_plan", "link_config", "disk",
+                  "admission_hook_factory", "app_handler")
+
+
+class _SessionBox(RDMABox):
+    _box_internal = True
+
+
+class _SessionPaging(RemotePagingSystem):
+    _box_internal = True
+
+
+class Session:
+    """A running cluster plus the capability objects layered on it."""
+
+    def __init__(self, spec: Optional[ClusterSpec] = None, *,
+                 box_config: Optional[BoxConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None,
+                 link_config: Optional[LinkConfig] = None,
+                 disk: Optional[DiskTier] = None,
+                 admission_hook_factory: Optional[
+                     Callable[[], AdmissionHook]] = None,
+                 app_handler: Optional[Callable] = None) -> None:
+        spec = ClusterSpec.coerce(spec).validate()
+        self.spec = spec
+        self._closed = False
+        cfg = box_config
+        if cfg is None:
+            poll = create_policy("polling", spec.polling)
+            cfg = BoxConfig(
+                channels_per_peer=spec.channels_per_peer,
+                batch_policy=create_policy("batching", spec.batching),
+                reg_mode=RegMode(spec.reg_mode),
+                kernel_space=spec.kernel_space,
+                window_bytes=spec.window_bytes,
+                max_drain=spec.max_drain,
+                poll=poll,
+                nic_cost=NICCostModel(**(spec.nic_cost or {})),
+                nic_scale=spec.nic_scale,
+                app_handler=app_handler,
+                rnr_retry_limit=spec.rnr_retry_limit,
+                rnr_backoff_us=spec.rnr_backoff_us,
+            )
+        else:
+            if spec.num_clients > 1 and cfg.admission_hook is not None \
+                    and admission_hook_factory is None:
+                raise ValueError(
+                    "BoxConfig.admission_hook is one stateful object — "
+                    "sharing it across clients would merge their latency "
+                    "signals; pass admission_hook_factory so each client "
+                    "gets its own hook")
+            if app_handler is not None:     # merge, don't silently drop
+                cfg = replace(cfg, app_handler=app_handler)
+        self._cfg = cfg
+
+        self.fabric = Fabric(
+            cost=cfg.nic_cost, scale=cfg.nic_scale,
+            kernel_space=cfg.kernel_space,
+            link=link_config if link_config is not None
+            else spec.link_config(),
+            faults=fault_plan if fault_plan is not None
+            else spec.fault_plan(),
+            seed=spec.seed)
+        self.directory = self.fabric.directory
+        self.clients: List[int] = [spec.client_node + i
+                                   for i in range(spec.num_clients)]
+        self.donors: List[int] = [spec.client_node + spec.num_clients + i
+                                  for i in range(spec.num_donors)]
+        for node in self.donors:
+            if spec.donor_nics:
+                self.fabric.add_node(node, donor_pages=spec.donor_pages)
+            elif node not in self.directory:
+                # bare regions without a serving NIC: transfers complete
+                # client-side (the microbenchmark fixture)
+                from ..core.region import RemoteRegion
+                self.directory.register(RemoteRegion(node, spec.donor_pages))
+
+        # per-client engines + disjoint paging/heap slices of every donor
+        share = spec.donor_pages // spec.num_clients
+        paging_pages = share - spec.heap_pages
+        self._heap_base = paging_pages          # offset within a slice
+        self._share = share
+        self._boxes: List[RDMABox] = []
+        self._pagings: List[RemotePagingSystem] = []
+        for i, node in enumerate(self.clients):
+            client_cfg = cfg
+            if admission_hook_factory is not None:
+                client_cfg = replace(cfg,
+                                     admission_hook=admission_hook_factory())
+            elif box_config is None:
+                client_cfg = replace(
+                    cfg,
+                    admission_hook=create_policy("admission", spec.admission))
+            box = _SessionBox(node, peers=self.donors, config=client_cfg,
+                              fabric=self.fabric)
+            self._boxes.append(box)
+            self._pagings.append(_SessionPaging(
+                box, spec.donor_pages, replication=spec.replication,
+                stripe_pages=spec.stripe_pages,
+                disk=disk if disk is not None
+                else DiskTier(latency_us=spec.disk_latency_us),
+                write_through_disk=spec.write_through_disk,
+                first_responder=spec.first_responder,
+                evict_after=spec.evict_after,
+                region_base=i * share, region_pages=paging_pages,
+                placement=create_policy("placement", spec.placement)))
+        self._heaps: Dict[int, RemoteHeap] = {}
+        self._pagers: Dict[int, Pager] = {}
+        self._tensors: Dict[int, TensorStore] = {}
+        self._kv_stores: List[KVStore] = []
+
+    # ---- lifetime ----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _guard(self) -> None:
+        if self._closed:
+            raise ClosedError("Session is closed")
+
+    def close(self) -> None:
+        """Idempotent teardown, cascading to every capability: engines
+        abort in-flight futures with ``ClosedError``, then the fabric
+        (NICs, links, delay line) shuts down."""
+        if self._closed:
+            return
+        self._closed = True
+        for box in self._boxes:
+            box.close()
+        self.fabric.close()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def flush(self, timeout: float = 30.0) -> None:
+        """Drain every client engine (event-driven per-box flush)."""
+        self._guard()
+        for box in self._boxes:
+            box.flush(timeout=timeout)
+
+    def _client_index(self, client: int) -> int:
+        if not 0 <= client < len(self.clients):
+            raise IndexError(f"client {client} out of range "
+                             f"(num_clients={len(self.clients)})")
+        return client
+
+    # ---- capabilities ------------------------------------------------------
+    def engine(self, client: int = 0) -> RDMABox:
+        """The client's node-level engine (page-addressed advanced API)."""
+        self._guard()
+        return self._boxes[self._client_index(client)]
+
+    def heap(self, client: int = 0) -> RemoteHeap:
+        """Handle-based remote memory (requires ``spec.heap_pages > 0``)."""
+        self._guard()
+        i = self._client_index(client)
+        if i not in self._heaps:
+            self._heaps[i] = RemoteHeap(
+                self, self._boxes[i], self.donors,
+                heap_base=i * self._share + self._heap_base,
+                heap_pages=self.spec.heap_pages)
+        return self._heaps[i]
+
+    def pager(self, client: int = 0) -> Pager:
+        """The client's replicated remote paging system."""
+        self._guard()
+        i = self._client_index(client)
+        if i not in self._pagers:
+            self._pagers[i] = Pager(self, self._pagings[i])
+        return self._pagers[i]
+
+    def tensors(self, client: int = 0, **offload_opts: Any) -> TensorStore:
+        """Tensor/pytree offload over the client's pager."""
+        self._guard()
+        i = self._client_index(client)
+        if i not in self._tensors:
+            from ..memory.offload import OffloadConfig
+            cfg = OffloadConfig(**offload_opts) if offload_opts else None
+            self._tensors[i] = TensorStore(self, self._pagings[i], cfg)
+        elif offload_opts:
+            raise ValueError("tensors() options are fixed at first call")
+        return self._tensors[i]
+
+    def kv_store(self, num_pages: int, page_tokens: int, kv_features: int,
+                 dtype=np.float32, client: int = 0,
+                 arena_pages: Optional[int] = None) -> KVStore:
+        """A paged KV cache whose spill arena is RESERVED from the
+        client's heap (``arena_pages``; default sized for one full pool
+        spill), so spills never overlap ``heap().alloc`` buffers or other
+        KVStores. Falls back to the raw donor regions (unreserved, legacy
+        layout) when ``heap_pages == 0``."""
+        self._guard()
+        i = self._client_index(client)
+        page_bytes = page_tokens * kv_features * np.dtype(dtype).itemsize
+        rdma_pages = max(1, -(-page_bytes // PAGE_SIZE))
+        base, arena = 0, None
+        if self.spec.heap_pages > 0:
+            arena = arena_pages if arena_pages is not None \
+                else num_pages * rdma_pages
+            base = self.heap(i).reserve_range(arena)
+        kv = KVStore(self, self._boxes[i], self.donors,
+                     num_pages=num_pages, page_tokens=page_tokens,
+                     kv_features=kv_features, dtype=dtype,
+                     remote_base_page=base, arena_pages=arena)
+        self._kv_stores.append(kv)
+        return kv
+
+    # ---- scenario choreography (delegates to the fabric) -------------------
+    def crash_donor(self, node: int) -> None:
+        """Mid-run donor crash: transfers to ``node`` start erroring with
+        RETRY_EXC_ERR; the paging layer detects, strikes, and evicts."""
+        self._guard()
+        self.fabric.crash(node)
+
+    def recover_donor(self, node: int) -> None:
+        self._guard()
+        self.fabric.recover(node)
+        for paging in self._pagings:
+            paging.recover_node(node)
+
+    def congest_path(self, client_node: int, donor: int, factor: float,
+                     until_us: Optional[float] = None) -> None:
+        """Congestion episode on one client↔donor path — both directions,
+        so the forward data leg AND the donor's ack leg degrade (and both
+        carry ECN marks the admission hook can react to)."""
+        self._guard()
+        self.fabric.congest(client_node, donor, factor, until_us=until_us)
+        self.fabric.congest(donor, client_node, factor, until_us=until_us)
+
+    def clear_path(self, client_node: int, donor: int) -> None:
+        self._guard()
+        self.fabric.clear_congestion(client_node, donor)
+        self.fabric.clear_congestion(donor, client_node)
+
+    # ---- the one stats tree ------------------------------------------------
+    def stats(self, flat: bool = False) -> Dict[str, Any]:
+        """The composed, namespaced stats tree.
+
+        ``fabric.*`` — links, donor-side service, fault state;
+        ``nic.<node>.*`` — per-NIC counters (clients and donors);
+        ``client.<i>.box.*`` — per-engine merge/admission/poll state
+        (plus ``client.<i>.paging`` and, when materialized, ``.heap`` /
+        ``.tensors`` / ``.kv``); ``paging.*`` — client 0's paging view.
+        ``flat=True`` returns dotted keys instead of the nested tree.
+        """
+        self._guard()
+        clients: Dict[str, Any] = {}
+        for i, (box, paging) in enumerate(zip(self._boxes, self._pagings)):
+            node: Dict[str, Any] = {"box": box.snapshot(),
+                                    "paging": paging.snapshot()}
+            if i in self._heaps:
+                node["heap"] = self._heaps[i].snapshot()
+            if i in self._tensors:
+                node["tensors"] = self._tensors[i].snapshot()
+            clients[str(i)] = node
+        tree = {
+            "fabric": self.fabric.snapshot(),
+            "nic": {str(n): snap
+                    for n, snap in self.fabric.nic_snapshots().items()},
+            "client": clients,
+            "paging": self._pagings[0].snapshot(),
+        }
+        if self._kv_stores:
+            tree["kv"] = {str(i): kv.snapshot()
+                          for i, kv in enumerate(self._kv_stores)}
+        return flatten_stats(tree) if flat else tree
+
+
+def open_session(spec: Union[None, str, Dict[str, Any], ClusterSpec] = None,
+                 **kwargs: Any) -> Session:
+    """Build and start a cluster session from a declarative spec.
+
+    ``spec`` may be a ``ClusterSpec``, a plain dict, a JSON string, or
+    None (defaults). Extra keyword arguments override spec fields
+    (``open(spec, num_clients=4)``); the ``ESCAPE_HATCHES`` keywords pass
+    imperative objects straight to ``Session`` for legacy/advanced use.
+    """
+    hatches = {k: kwargs.pop(k) for k in ESCAPE_HATCHES if k in kwargs}
+    spec = ClusterSpec.coerce(spec)
+    if kwargs:
+        spec = replace(spec, **kwargs)
+    return Session(spec, **hatches)
+
+
+__all__ = ["ESCAPE_HATCHES", "Session", "open_session"]

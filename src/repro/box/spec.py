@@ -1,0 +1,230 @@
+"""Declarative cluster description — the input to ``repro.box.open``.
+
+A ``ClusterSpec`` is plain data: topology (donors, clients), durability
+(replication, disk), the link model, a fault script, policy names with
+parameters, and the engine knobs. It round-trips through ``dict``/JSON so
+a deployment is a config file, not wiring code:
+
+    spec = ClusterSpec(num_donors=3, replication=2, heap_pages=1024,
+                       admission="congestion",
+                       faults=[{"kind": "slow", "node": 2, "factor": 25.0}])
+    session = repro.box.open(spec)
+
+Policies are referenced by registry name (see ``repro.box.policies``)
+with an optional parameter dict; objects that cannot be serialized
+(a pre-built ``BoxConfig``, an imperative ``FaultPlan``, a shared
+``DiskTier``) are *not* spec fields — they are escape-hatch keyword
+arguments of ``Session``/``open`` for legacy and advanced callers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Union
+
+from ..core.descriptors import WCStatus
+from ..fabric.faults import FaultPlan
+from ..fabric.link import LinkConfig
+
+
+@dataclass
+class PolicySpec:
+    """A registry reference: policy name + constructor parameters."""
+
+    name: str
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    @classmethod
+    def coerce(cls, value: Union[str, Dict[str, Any], "PolicySpec"]
+               ) -> "PolicySpec":
+        if isinstance(value, PolicySpec):
+            return value
+        if isinstance(value, str):
+            return cls(name=value)
+        if isinstance(value, dict):
+            return cls(name=value["name"], params=dict(value.get("params", {})))
+        raise TypeError(f"policy reference must be str/dict/PolicySpec, "
+                        f"got {type(value).__name__}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "params": dict(self.params)}
+
+
+# fault-event fields that serialize verbatim (status is special-cased:
+# it crosses the JSON boundary as the WCStatus member name)
+_FAULT_FIELDS = ("kind", "node", "src", "dst", "after_ops", "at_us",
+                 "factor", "prob", "max_errors", "until_us")
+
+
+def fault_plan_from_dicts(events: List[Dict[str, Any]],
+                          seed: int = 0) -> FaultPlan:
+    """Compile declarative fault-event dicts into a ``FaultPlan``."""
+    plan = FaultPlan(seed=seed)
+    for ev in events:
+        kind = ev["kind"]
+        if kind == "crash":
+            plan.crash(node=ev["node"], after_ops=ev.get("after_ops", 0),
+                       at_us=ev.get("at_us"))
+        elif kind == "slow":
+            plan.slow(node=ev["node"], factor=ev["factor"],
+                      after_ops=ev.get("after_ops", 0),
+                      at_us=ev.get("at_us"))
+        elif kind == "flaky":
+            status = ev.get("status", WCStatus.RNR_RETRY_ERR.name)
+            plan.flaky(node=ev["node"], prob=ev["prob"],
+                       status=WCStatus[status] if isinstance(status, str)
+                       else status,
+                       max_errors=ev.get("max_errors"),
+                       after_ops=ev.get("after_ops", 0))
+        elif kind == "congest":
+            plan.congest(src=ev["src"], dst=ev["dst"], factor=ev["factor"],
+                         after_ops=ev.get("after_ops", 0),
+                         until_us=ev.get("until_us"))
+        else:
+            raise ValueError(f"unknown fault kind {kind!r} "
+                             f"(crash/slow/flaky/congest)")
+    return plan
+
+
+def fault_plan_to_dicts(plan: FaultPlan) -> List[Dict[str, Any]]:
+    """The inverse of ``fault_plan_from_dicts`` (drops default fields)."""
+    out = []
+    for ev in plan.events:
+        d: Dict[str, Any] = {"kind": ev.kind.value}
+        for name in _FAULT_FIELDS[1:]:
+            val = getattr(ev, name)
+            if val not in (None, 0, 0.0) or (name == "factor" and
+                                             ev.kind.value in ("slow",
+                                                               "congest")):
+                d[name] = val
+        if ev.kind.value == "flaky":
+            d["status"] = ev.status.name
+        out.append(d)
+    return out
+
+
+@dataclass
+class ClusterSpec:
+    """Everything ``repro.box.open`` needs to build a Session, as data.
+
+    Donor-region layout: each donor's region of ``donor_pages`` is split
+    into one slice per client; within a client's slice the first
+    ``share - heap_pages`` pages back the ``Pager`` and the last
+    ``heap_pages`` back the ``RemoteHeap`` (and the ``KVStore`` spill
+    arena). ``heap_pages=0`` reproduces the pre-``repro.box`` layout
+    exactly (whole slice to paging, heap allocation disabled).
+    """
+
+    # topology
+    num_donors: int = 3
+    donor_pages: int = 16384
+    num_clients: int = 1
+    client_node: int = 0
+    donor_nics: bool = True     # False: bare regions, client-side completion
+    # durability / paging
+    replication: int = 2
+    stripe_pages: int = 16
+    heap_pages: int = 0
+    write_through_disk: bool = False
+    first_responder: bool = False
+    evict_after: int = 3
+    disk_latency_us: float = 100.0
+    # engine knobs (BoxConfig equivalents)
+    channels_per_peer: int = 4
+    window_bytes: Optional[int] = 8 << 20
+    max_drain: int = 64
+    kernel_space: bool = True
+    reg_mode: str = "auto"
+    nic_scale: float = 1e-6
+    rnr_retry_limit: int = 3
+    rnr_backoff_us: float = 200.0
+    nic_cost: Optional[Dict[str, float]] = None   # NICCostModel overrides
+    # link model ({"latency_us": .., "gbps": .., "jitter_us": ..})
+    link: Optional[Dict[str, Any]] = None
+    # fault script (list of event dicts, see fault_plan_from_dicts)
+    faults: Optional[List[Dict[str, Any]]] = None
+    seed: int = 0
+    # policies, by registry name
+    admission: PolicySpec = field(
+        default_factory=lambda: PolicySpec("static"))
+    polling: PolicySpec = field(
+        default_factory=lambda: PolicySpec("adaptive"))
+    batching: PolicySpec = field(
+        default_factory=lambda: PolicySpec("hybrid"))
+    placement: PolicySpec = field(
+        default_factory=lambda: PolicySpec("striped"))
+
+    _POLICY_FIELDS = ("admission", "polling", "batching", "placement")
+
+    def __post_init__(self) -> None:
+        for name in self._POLICY_FIELDS:
+            setattr(self, name, PolicySpec.coerce(getattr(self, name)))
+
+    # ---- validation --------------------------------------------------------
+    def validate(self) -> "ClusterSpec":
+        if self.num_donors < 1:
+            raise ValueError("num_donors must be >= 1")
+        if self.num_clients < 1:
+            raise ValueError("num_clients must be >= 1")
+        if self.replication < 1:
+            raise ValueError("replication must be >= 1")
+        share = self.donor_pages // self.num_clients
+        if not 0 <= self.heap_pages <= share:
+            raise ValueError(
+                f"heap_pages={self.heap_pages} must fit the per-client "
+                f"donor-region slice of {share} pages "
+                f"({self.donor_pages} pages / {self.num_clients} clients)")
+        return self
+
+    # ---- serialization -----------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for f in dataclasses.fields(self):
+            val = getattr(self, f.name)
+            if isinstance(val, PolicySpec):
+                val = val.to_dict()
+            elif isinstance(val, (dict, list)):
+                val = json.loads(json.dumps(val))   # deep, JSON-safe copy
+            out[f.name] = val
+        return out
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "ClusterSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(data) - known
+        if unknown:
+            raise ValueError(f"unknown ClusterSpec fields: {sorted(unknown)}")
+        return cls(**data)
+
+    def to_json(self, **kwargs: Any) -> str:
+        return json.dumps(self.to_dict(), **kwargs)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ClusterSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def coerce(cls, value: Union[None, str, Dict[str, Any], "ClusterSpec"]
+               ) -> "ClusterSpec":
+        """None → defaults; dict → from_dict; str → from_json."""
+        if value is None:
+            return cls()
+        if isinstance(value, ClusterSpec):
+            return value
+        if isinstance(value, dict):
+            return cls.from_dict(value)
+        if isinstance(value, str):
+            return cls.from_json(value)
+        raise TypeError(f"cannot build ClusterSpec from "
+                        f"{type(value).__name__}")
+
+    # ---- compiled views ----------------------------------------------------
+    def link_config(self) -> Optional[LinkConfig]:
+        return None if self.link is None else LinkConfig(**self.link)
+
+    def fault_plan(self) -> Optional[FaultPlan]:
+        if not self.faults:
+            return None
+        return fault_plan_from_dicts(self.faults, seed=self.seed)

@@ -1,0 +1,28 @@
+"""Stats-tree utilities.
+
+Every layer of the library implements ``snapshot() -> dict``;
+``Session.stats()`` composes them into one namespaced tree. This module
+holds the view helpers shared by consumers (dashboards, benchmarks,
+tests) that want dotted-key access instead of nested dicts.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+
+def flatten_stats(tree: Dict[str, Any], prefix: str = "",
+                  sep: str = ".") -> Dict[str, Any]:
+    """Flatten a nested stats tree into dotted keys.
+
+    ``{"nic": {"0": {"wqes_posted": 7}}}`` becomes
+    ``{"nic.0.wqes_posted": 7}``. Lists and scalars are leaves.
+    """
+    out: Dict[str, Any] = {}
+    for key, value in tree.items():
+        path = f"{prefix}{sep}{key}" if prefix else str(key)
+        if isinstance(value, dict):
+            out.update(flatten_stats(value, prefix=path, sep=sep))
+        else:
+            out[path] = value
+    return out

@@ -1,5 +1,9 @@
 """repro.core — RDMAbox's contribution: load-aware batching, admission
-control, adaptive polling, and the node-level remote-memory abstraction."""
+control, adaptive polling, and the node-level remote-memory abstraction.
+
+The supported public surface is ``repro.box`` (declarative ClusterSpec →
+Session → capability handles); this package is the engine underneath it.
+"""
 
 from .admission import AdmissionController, AdmissionHook, CongestionAwareHook
 from .batching import BatchPolicy, plan, resolve_reg_mode
@@ -15,22 +19,30 @@ from .descriptors import (
     WorkRequest,
     contiguous_runs,
 )
+from .errors import AllocError, BoxError, ClosedError
 from .merge_queue import MergeQueue
 from .nic import NICCostModel, SimulatedNIC
-from .paging import DiskTier, PrefetchBatch, RemotePagingSystem
-from .polling import Poller, PollConfig, PollMode
-from .rdmabox import (BatchFuture, BatchTransferError, BoxConfig, RDMABox,
-                      TransferError, TransferFuture)
+from .paging import DiskTier, PrefetchBatch, RemotePagingSystem, StripedPlacement
+from .polling import PollConfig, Poller, PollMode
+from .rdmabox import (
+    BatchFuture,
+    BatchTransferError,
+    BoxConfig,
+    RDMABox,
+    TransferError,
+    TransferFuture,
+)
 from .region import RegionDirectory, RemoteRegion
 
 __all__ = [
     "AdmissionController", "AdmissionHook", "CongestionAwareHook",
+    "AllocError", "BoxError", "ClosedError",
     "BatchPolicy", "plan",
     "resolve_reg_mode", "Channel", "ChannelSet", "CompletionQueue",
     "PAGE_SIZE", "RegMode", "TransferDescriptor", "Verb", "WCStatus",
     "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",
     "NICCostModel", "SimulatedNIC", "DiskTier", "PrefetchBatch",
-    "RemotePagingSystem",
+    "RemotePagingSystem", "StripedPlacement",
     "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
     "BatchFuture", "BatchTransferError",
     "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",

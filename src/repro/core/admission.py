@@ -49,12 +49,20 @@ class CongestionAwareHook(AdmissionHook):
 
     Adjustments happen at most once per ``adjust_every`` observations so
     one burst of late completions cannot slam the window to the floor.
+
+    The hook also consumes the fabric's explicit congestion signal: every
+    ``WorkCompletion`` carries an ECN-style mark (``ecn_mult`` > 1 when
+    any leg of the path had an active congestion/straggler multiplier).
+    With ``ecn_sensitive=True`` a marked majority of the adjustment
+    window forces a shrink even while the latency EWMA lags — explicit
+    marks lead the latency signal by up to a full EWMA time constant,
+    and they cannot be fooled by a polluted calibration baseline.
     """
 
     def __init__(self, shrink: float = 0.5, grow: float = 1.5,
                  latency_factor: float = 3.0, min_fraction: float = 1 / 32,
                  ewma_alpha: float = 0.25, adjust_every: int = 8,
-                 calibration: int = 24) -> None:
+                 calibration: int = 24, ecn_sensitive: bool = True) -> None:
         assert 0.0 < shrink < 1.0 < grow
         self.shrink = shrink
         self.grow = grow
@@ -63,14 +71,17 @@ class CongestionAwareHook(AdmissionHook):
         self.ewma_alpha = ewma_alpha
         self.adjust_every = adjust_every
         self.calibration = calibration
+        self.ecn_sensitive = ecn_sensitive
         self._lock = threading.Lock()
         self._fraction = 1.0
         self._base_us: Optional[float] = None
         self._ewma_us: Optional[float] = None
         self._observations = 0
         self._since_adjust = 0
+        self._marks_since_adjust = 0
         self.shrinks = AtomicCounter()
         self.grows = AtomicCounter()
+        self.ecn_marks = AtomicCounter()
 
     def observe(self, wc: WorkCompletion) -> None:
         if wc.status is not WCStatus.SUCCESS:
@@ -78,6 +89,9 @@ class CongestionAwareHook(AdmissionHook):
         lat = wc.latency_us
         if lat <= 0.0:
             return
+        marked = wc.ecn_mult > 1.0
+        if marked:
+            self.ecn_marks.add()
         with self._lock:
             self._observations += 1
             a = self.ewma_alpha
@@ -88,12 +102,23 @@ class CongestionAwareHook(AdmissionHook):
                 self._base_us = self._ewma_us    # loaded steady-state est.
                 if self._observations <= self.calibration:
                     return
+            # marks count only after calibration: a blip that ended during
+            # calibration must not force a shrink on a clean window
+            if marked:
+                self._marks_since_adjust += 1
             self._base_us = min(self._base_us, self._ewma_us)
             self._since_adjust += 1
             if self._since_adjust < self.adjust_every:
                 return
+            # a marked majority of the window is congestion even when the
+            # latency EWMA has not (yet) crossed the threshold
+            ecn_congested = (self.ecn_sensitive
+                             and self._marks_since_adjust * 2
+                             >= self.adjust_every)
             self._since_adjust = 0
-            if self._ewma_us > self.latency_factor * self._base_us:
+            self._marks_since_adjust = 0
+            if ecn_congested \
+                    or self._ewma_us > self.latency_factor * self._base_us:
                 new = max(self.min_fraction, self._fraction * self.shrink)
                 if new < self._fraction:
                     self.shrinks.add()
@@ -119,6 +144,7 @@ class CongestionAwareHook(AdmissionHook):
                 "ewma_latency_us": self._ewma_us,
                 "shrinks": self.shrinks.value,
                 "grows": self.grows.value,
+                "ecn_marks": self.ecn_marks.value,
             }
 
 
@@ -195,3 +221,14 @@ class AdmissionController:
         with self._cv:
             self._in_flight = max(0, self._in_flight - nbytes)
             self._cv.notify_all()
+
+    def snapshot(self) -> dict:
+        """One stats-tree node for the window + its policy hook."""
+        out = {
+            "blocked": self.blocked_count.value,
+            "limit": self.current_limit,
+            "in_flight_bytes": self.in_flight_bytes,
+        }
+        if hasattr(self.hook, "snapshot"):
+            out["hook"] = self.hook.snapshot()
+        return out

@@ -114,6 +114,16 @@ class WorkCompletion:
     post_rtime: float = 0.0           # real perf_counter at post
     complete_rtime: float = 0.0       # real perf_counter at completion
     requests: List[WorkRequest] = field(default_factory=list)
+    # ECN-style congestion mark: the largest fault/congestion multiplier
+    # active on any leg of this transfer's path (1.0 = clean path). Lets
+    # admission policies react to explicit fabric state instead of
+    # inferring it from latency alone.
+    ecn_mult: float = 1.0
+
+    @property
+    def ecn(self) -> bool:
+        """True when the fabric marked this completion as congested."""
+        return self.ecn_mult > 1.0
 
     @property
     def latency_us(self) -> float:

@@ -37,8 +37,8 @@ import numpy as np
 
 from .completion import CompletionQueue
 from .descriptors import (
-    AtomicCounter,
     PAGE_SIZE,
+    AtomicCounter,
     RegMode,
     TransferDescriptor,
     Verb,
@@ -196,6 +196,7 @@ class _DonorJob:
     post_r: float
     fwd_complete_v: float         # forward-leg virtual completion stamp
     fwd_delay_real: float         # forward propagation delay (REAL seconds)
+    fwd_mult: float = 1.0         # forward-leg congestion/straggler multiplier
 
 
 class SimulatedNIC:
@@ -402,7 +403,8 @@ class SimulatedNIC:
                 desc=desc, cq=qp.cq, src_node=self.node_id,
                 status=status or WCStatus.SUCCESS,
                 post_v=post_v, post_r=post_r,
-                fwd_complete_v=complete_v, fwd_delay_real=delay_real))
+                fwd_complete_v=complete_v, fwd_delay_real=delay_real,
+                fwd_mult=mult))
             return
         if status is None:
             status = WCStatus.SUCCESS
@@ -424,6 +426,7 @@ class SimulatedNIC:
             post_rtime=post_r,
             complete_rtime=time.perf_counter(),
             requests=desc.requests,
+            ecn_mult=mult,
         )
         self.stats.completions.add(1)
         if status != WCStatus.SUCCESS:
@@ -496,6 +499,7 @@ class SimulatedNIC:
             post_rtime=job.post_r,
             complete_rtime=time.perf_counter(),
             requests=job.desc.requests,
+            ecn_mult=job.fwd_mult,
         )
         client_nic = (self._fabric.nic_or_none(job.src_node)
                       if self._fabric is not None else None)
@@ -597,6 +601,9 @@ class SimulatedNIC:
             post_rtime=job.post_r,
             complete_rtime=time.perf_counter(),
             requests=desc.requests,
+            # mark with the worst leg: forward (client egress + link) or
+            # donor service/ack — either being degraded is path congestion
+            ecn_mult=max(job.fwd_mult, mult),
         )
         # completion accounting stays with the *client's* NIC — it is the
         # one whose CQ receives the CQE

@@ -41,8 +41,40 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .._deprecation import warn_once
 from .descriptors import PAGE_SIZE, AtomicCounter
 from .rdmabox import BatchFuture, RDMABox, TransferFuture
+
+
+class StripedPlacement:
+    """The paper's striped replica layout (the default placement policy).
+
+    Donor count n, stripe S, replication r: page p belongs to group
+    g = p // S; replica k lives on donor (g + k) % n at offset
+    ``k * (region_pages // r) + (g // n) * S + (p % S)`` — per-replica
+    regions are disjoint, so replicas never collide, and consecutive
+    local pages land on contiguous remote pages of the same donor (the
+    locality load-aware batching exploits).
+
+    Alternative policies register under the ``placement`` kind of the
+    ``repro.box`` policy registry and are selected by name in a
+    ``ClusterSpec``; they must honor the same two invariants (replicas of
+    one page on distinct donors, no two pages sharing a donor page).
+    """
+
+    def capacity_pages(self, ps: "RemotePagingSystem") -> int:
+        return (ps.replica_region // ps.stripe) * ps.n * ps.stripe
+
+    def replicas(self, ps: "RemotePagingSystem",
+                 page_id: int) -> List[Tuple[int, int]]:
+        g, off = divmod(page_id, ps.stripe)
+        out = []
+        for k in range(ps.r):
+            donor = ps.donors[(g + k) % ps.n]
+            remote = (ps.region_base + k * ps.replica_region
+                      + (g // ps.n) * ps.stripe + off)
+            out.append((donor, remote))
+        return out
 
 
 class DiskTier:
@@ -81,11 +113,21 @@ class RemotePagingSystem:
         evict_after: int = 3,
         region_base: int = 0,
         region_pages: Optional[int] = None,
+        placement: Optional[StripedPlacement] = None,
     ) -> None:
         """``region_base``/``region_pages`` carve this paging system's slice
         out of each donor's region. Multiple clients sharing donors MUST use
         disjoint slices — placement is a pure function of page_id, so two
-        clients with the same slice would overwrite each other's pages."""
+        clients with the same slice would overwrite each other's pages.
+
+        ``placement`` swaps the replica-layout policy (default: the
+        paper's striped layout); named policies come from the
+        ``repro.box`` placement registry."""
+        if not getattr(self, "_box_internal", False):
+            warn_once(
+                "RemotePagingSystem",
+                "constructing RemotePagingSystem directly is deprecated; "
+                "use repro.box.open(spec).pager()")
         self.box = box
         self.donors = list(box.peers)
         self.n = len(self.donors)
@@ -119,7 +161,8 @@ class RemotePagingSystem:
         # bytes are re-issued so the donor provably converges to them.
         self._wb: Dict[int, list] = {}
         self._lock = threading.Lock()
-        self.capacity_pages = (self.replica_region // self.stripe) * self.n * self.stripe
+        self.placement = placement or StripedPlacement()
+        self.capacity_pages = self.placement.capacity_pages(self)
         # failover telemetry (swap APIs are called from many threads)
         self.read_failovers = AtomicCounter()   # reads not served by primary
         self.write_failures = AtomicCounter()   # replica writes that errored
@@ -132,14 +175,7 @@ class RemotePagingSystem:
         """[(donor_node, remote_page)] for each replica of ``page_id``."""
         if page_id >= self.capacity_pages:
             raise ValueError(f"page {page_id} beyond capacity {self.capacity_pages}")
-        g, off = divmod(page_id, self.stripe)
-        out = []
-        for k in range(self.r):
-            donor = self.donors[(g + k) % self.n]
-            remote = (self.region_base + k * self.replica_region
-                      + (g // self.n) * self.stripe + off)
-            out.append((donor, remote))
-        return out
+        return self.placement.replicas(self, page_id)
 
     # ---- donor health ------------------------------------------------------
     def fail_node(self, node: int) -> None:
@@ -462,7 +498,7 @@ class RemotePagingSystem:
                 for donor, pairs in by_donor.items()}
         return PrefetchBatch(self, slots, futs)
 
-    def stats(self) -> Dict[str, int]:
+    def snapshot(self) -> Dict[str, int]:
         with self._lock:
             failed = sorted(self._failed)
         return {
@@ -475,6 +511,9 @@ class RemotePagingSystem:
             "evictions": self.evictions,
             "failed_donors": failed,
         }
+
+    # legacy name; the session stats tree composes snapshot()
+    stats = snapshot
 
 
 class PrefetchBatch:

@@ -30,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .._deprecation import warn_once
 from .admission import AdmissionController, AdmissionHook
 from .batching import BatchPolicy, plan
 from .channel import ChannelSet
@@ -42,9 +43,10 @@ from .descriptors import (
     WorkCompletion,
     WorkRequest,
 )
+from .errors import BoxError, ClosedError
 from .merge_queue import MergeQueue
 from .nic import NICCostModel
-from .polling import Poller, PollConfig, PollMode
+from .polling import PollConfig, Poller, PollMode
 from .region import RegionDirectory
 
 logger = logging.getLogger(__name__)
@@ -55,7 +57,7 @@ _FUTURE_SHARDS = 16
 _SHARD_MASK = _FUTURE_SHARDS - 1
 
 
-class TransferError(RuntimeError):
+class TransferError(BoxError):
     """A transfer completed with an error WorkCompletion.
 
     Carries the failing WC so callers (the paging failover path, retry
@@ -78,7 +80,7 @@ class TransferError(RuntimeError):
         return self.status == WCStatus.RNR_RETRY_ERR
 
 
-class BatchTransferError(RuntimeError):
+class BatchTransferError(BoxError):
     """One or more pages of a batched transfer failed.
 
     ``errors`` maps remote page index → ``TransferError``; pages absent
@@ -101,12 +103,20 @@ class TransferFuture:
     def __init__(self) -> None:
         self._event = threading.Event()
         self._wc: Optional[WorkCompletion] = None
-        self._error: Optional[TransferError] = None
+        self._error: Optional[BoxError] = None
 
     def set(self, wc: WorkCompletion) -> None:
         self._wc = wc
         if wc.status != WCStatus.SUCCESS:
             self._error = TransferError(wc)
+        self._event.set()
+
+    def abort(self, exc: BoxError) -> None:
+        """Fail the future without a completion (engine closed mid-flight);
+        a waiter is released immediately and ``wait`` raises ``exc``."""
+        if self._event.is_set():
+            return
+        self._error = exc
         self._event.set()
 
     def resolve(self, req: WorkRequest, wc: WorkCompletion) -> None:
@@ -121,9 +131,10 @@ class TransferFuture:
         assert self._wc is not None
         return self._wc
 
-    def exception(self, timeout: Optional[float] = None) -> Optional[TransferError]:
+    def exception(self, timeout: Optional[float] = None) -> Optional[BoxError]:
         """Non-raising accessor: wait for completion, then return the
-        TransferError (or None on success). Raises only TimeoutError."""
+        TransferError (or None on success; a ClosedError if the engine
+        closed mid-flight). Raises only TimeoutError."""
         if not self._event.wait(timeout=timeout):
             raise TimeoutError("RDMA transfer did not complete in time")
         return self._error
@@ -146,25 +157,40 @@ class BatchFuture:
     fired by the time a waiter is released.
     """
 
-    __slots__ = ("_event", "_lock", "_remaining", "_errors", "pages")
+    __slots__ = ("_event", "_lock", "_remaining", "_errors", "_aborted",
+                 "pages")
 
     def __init__(self, num_requests: int) -> None:
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._remaining = num_requests
         self._errors: Dict[int, TransferError] = {}
+        self._aborted: Optional[BoxError] = None
         self.pages = num_requests
         if num_requests == 0:
             self._event.set()
 
     def resolve(self, req: WorkRequest, wc: WorkCompletion) -> None:
         with self._lock:
+            if self._aborted is not None:
+                return
             if wc.status != WCStatus.SUCCESS:
                 self._errors[req.remote_addr] = TransferError(wc)
             self._remaining -= 1
             done = self._remaining <= 0
         if done:
             self._event.set()
+
+    def abort(self, exc: BoxError) -> None:
+        """Fail the whole batch without completions (engine closed
+        mid-flight). Waiters are released immediately; ``wait``/``errors``
+        raise ``exc``. Idempotent; a no-op once the batch resolved."""
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._aborted = exc
+            self._remaining = 0
+        self._event.set()
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -176,11 +202,14 @@ class BatchFuture:
     def errors(self, timeout: Optional[float] = None) -> Dict[int, TransferError]:
         """Wait for the whole batch, then return the per-page error map
         keyed by remote page index (empty ⇒ every page succeeded).
-        Raises only TimeoutError — the failover paths inspect outcomes
+        Raises TimeoutError while in flight and ClosedError if the engine
+        closed mid-flight — otherwise the failover paths inspect outcomes
         per page instead of unwinding on the first error."""
         if not self._event.wait(timeout=timeout):
             raise TimeoutError("batched RDMA transfer did not complete in time")
         with self._lock:
+            if self._aborted is not None:
+                raise self._aborted
             return dict(self._errors)
 
     def wait(self, timeout: Optional[float] = None) -> None:
@@ -230,6 +259,11 @@ class RDMABox:
         self.cfg = config or BoxConfig()
         self._owns_fabric = fabric is None
         if fabric is None:
+            warn_once(
+                "RDMABox-legacy",
+                "RDMABox(node, directory, peers) with a private fabric is "
+                "deprecated; build the cluster with repro.box.open(spec) "
+                "and use session.engine() (or pass fabric= explicitly)")
             from ..fabric import Fabric   # deferred: fabric imports core
             if directory is None:
                 raise ValueError("RDMABox needs a directory or a fabric")
@@ -329,24 +363,41 @@ class RDMABox:
                 raise TimeoutError("flush timed out with transfers in flight")
 
     def close(self) -> None:
+        """Tear the engine down (idempotent). Transfers still in flight
+        fail their futures with ``ClosedError`` immediately — waiters are
+        released now instead of hitting their flush/wait timeouts."""
+        if self._closed:
+            return
         self._closed = True
         self.poller.stop()
         self.channels.close()
         self.nic.close()
         if self._owns_fabric:
             self.fabric.close()
+        err = ClosedError(
+            f"RDMABox(node {self.node_id}) closed with transfers in flight")
+        aborted: List[object] = []
+        for s in range(_FUTURE_SHARDS):
+            with self._futures_locks[s]:
+                if self._futures[s]:
+                    aborted.extend(self._futures[s].values())
+                    self._futures[s].clear()
+        for fut in aborted:             # BatchFutures repeat per page;
+            fut.abort(err)              # abort is idempotent
+        with self._pending_cv:
+            self._pending = 0
+            self._pending_cv.notify_all()
 
-    def stats(self) -> Dict[str, object]:
+    def snapshot(self) -> Dict[str, object]:
+        """Engine-local stats node for the composed session tree (the
+        NIC/fabric views live under their own ``nic.*``/``fabric.*``
+        namespaces there)."""
         qr, qw = self._queues[Verb.READ], self._queues[Verb.WRITE]
         drains = qr.drains.value + qw.drains.value
         drained = qr.drained_requests.value + qw.drained_requests.value
-        out = {
-            "nic": self.nic.stats.snapshot(),
-            "faults": self.fabric.faults.snapshot(),
+        return {
             "poll": self.poller.stats.snapshot(),
-            "admission_blocked": self.admission.blocked_count.value,
-            "admission_limit": self.admission.current_limit,
-            "in_flight_bytes": self.admission.in_flight_bytes,
+            "admission": self.admission.snapshot(),
             "rnr_retries": self.rnr_retries.value,
             "callback_errors": self.callback_errors.value,
             "pending_requests": self._pending,
@@ -360,14 +411,29 @@ class RDMABox:
                 "solo_posts": qr.solo_posts.value + qw.solo_posts.value,
             },
         }
-        hook = self.admission.hook
-        if hasattr(hook, "snapshot"):
-            out["admission_hook"] = hook.snapshot()
+
+    def stats(self) -> Dict[str, object]:
+        """Legacy flat stats dict (pre-``repro.box`` shape); new code
+        should read ``Session.stats()``'s composed tree instead."""
+        snap = self.snapshot()
+        admission = snap.pop("admission")
+        out = {
+            "nic": self.nic.stats.snapshot(),
+            "faults": self.fabric.faults.snapshot(),
+            "admission_blocked": admission["blocked"],
+            "admission_limit": admission["limit"],
+            "in_flight_bytes": admission["in_flight_bytes"],
+            **snap,
+        }
+        if "hook" in admission:
+            out["admission_hook"] = admission["hook"]
         return out
 
     # ---- engine internals ----------------------------------------------------
     def _submit(self, verb: Verb, dest: int, page: int, num_pages: int,
                 payload, callback=None) -> TransferFuture:
+        if self._closed:
+            raise ClosedError(f"RDMABox(node {self.node_id}) is closed")
         wr = WorkRequest(verb=verb, dest_node=dest, remote_addr=page,
                          num_pages=num_pages, payload=payload,
                          enqueue_time=time.perf_counter(),
@@ -377,6 +443,13 @@ class RDMABox:
             self._futures[wr.wr_id & _SHARD_MASK][wr.wr_id] = fut
         with self._pending_cv:
             self._pending += 1
+        # close() may have drained the futures shards between the guard at
+        # the top and our insert — re-check so no future outlives close
+        # unaborted (close sets _closed BEFORE draining, so seeing it False
+        # here means the drain will observe our insert)
+        if self._closed:
+            self._unregister([wr])
+            raise ClosedError(f"RDMABox(node {self.node_id}) is closed")
         self._queues[verb].submit(wr)
         return fut
 
@@ -384,6 +457,8 @@ class RDMABox:
                       pages: Sequence[Tuple[int, np.ndarray]],
                       callbacks: Optional[Sequence[Optional[Callable]]],
                       ) -> BatchFuture:
+        if self._closed:
+            raise ClosedError(f"RDMABox(node {self.node_id}) is closed")
         if callbacks is None:
             callbacks = (None,) * len(pages)
         elif len(callbacks) != len(pages):
@@ -418,8 +493,23 @@ class RDMABox:
                     table[wr.wr_id] = fut
         with self._pending_cv:
             self._pending += len(wrs)
+        # same close() race as _submit: re-check after registration
+        if self._closed:
+            self._unregister(wrs)
+            raise ClosedError(f"RDMABox(node {self.node_id}) is closed")
         self._queues[verb].submit_many(wrs)
         return fut
+
+    def _unregister(self, wrs: Sequence[WorkRequest]) -> None:
+        """Back out futures registered by a submit that lost the race with
+        close(); a pop may find the entry already drained (and aborted)."""
+        for wr in wrs:
+            with self._futures_locks[wr.wr_id & _SHARD_MASK]:
+                self._futures[wr.wr_id & _SHARD_MASK].pop(wr.wr_id, None)
+        with self._pending_cv:
+            self._pending -= len(wrs)
+            if self._pending <= 0:
+                self._pending_cv.notify_all()
 
     def _make_poster(self) -> Callable[[List[WorkRequest]], None]:
         cfg = self.cfg

@@ -141,17 +141,27 @@ class Fabric:
         self.faults.clear_congestion(src, dst)
 
     # ---- lifecycle ---------------------------------------------------------
-    def stats(self) -> Dict[str, object]:
+    def snapshot(self) -> Dict[str, object]:
+        """Fabric-level stats node (links, donor-side service, faults) —
+        per-NIC counters live under the session tree's ``nic.*``
+        namespace, see ``nic_snapshots``."""
         with self._lock:
-            nics = {n: nic.stats.snapshot() for n, nic in self._nics.items()}
             service = {}
             for n, nic in self._nics.items():
                 fs = nic.fairness_snapshot()
                 if fs:
                     service[n] = fs
             links = [ln.snapshot() for ln in self._links.values()]
-        return {"nics": nics, "links": links, "service": service,
+        return {"links": links, "service": service,
                 "faults": self.faults.snapshot()}
+
+    def nic_snapshots(self) -> Dict[int, Dict[str, int]]:
+        with self._lock:
+            return {n: nic.stats.snapshot() for n, nic in self._nics.items()}
+
+    def stats(self) -> Dict[str, object]:
+        """Legacy flat shape (``nics`` folded in)."""
+        return {"nics": self.nic_snapshots(), **self.snapshot()}
 
     def close(self) -> None:
         with self._lock:

@@ -21,7 +21,7 @@ from pathlib import Path  # noqa: E402
 
 import jax            # noqa: E402
 
-from repro.configs import (ARCH_IDS, RunConfig, SHAPES, cell_supported,
+from repro.configs import (ARCH_IDS, SHAPES, RunConfig, cell_supported,
                            get_config)                       # noqa: E402
 from repro.launch.mesh import make_production_mesh           # noqa: E402
 from repro.launch.steps import build_step                    # noqa: E402

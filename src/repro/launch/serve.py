@@ -18,11 +18,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import box
 from repro.configs import get_config, get_reduced
-from repro.fabric import FaultPlan, LinkConfig
 from repro.launch.mesh import make_local_mesh
-from repro.memory import MemoryCluster, PagedKVCache
 from repro.models import decode_step, init_cache, init_stack, prefill
+
+# pages reserved per client for the KV spill arena (the heap slice of
+# each donor region); the rest of the slice backs background paging
+KV_HEAP_PAGES = 1024
 
 
 def main() -> None:
@@ -61,7 +64,8 @@ def main() -> None:
     if args.straggler:
         try:
             node, factor = args.straggler.split(":")
-            faults = FaultPlan().slow(int(node), float(factor))
+            faults = [{"kind": "slow", "node": int(node),
+                       "factor": float(factor)}]
         except ValueError:
             ap.error(f"--straggler expects NODE:FACTOR (e.g. 1:30), "
                      f"got {args.straggler!r}")
@@ -109,17 +113,21 @@ def main() -> None:
         # host-side paged KV tier mirrors the device cache per sequence
         kv_features = 64
         paged = None
-        cluster = None
+        session = None
         if args.spill:
-            cluster = MemoryCluster(
+            spec = box.ClusterSpec(
                 num_donors=args.donors, donor_pages=1 << 14,
                 replication=args.replication,
                 num_clients=args.clients,
-                link=LinkConfig(latency_us=args.link_latency_us,
-                                gbps=args.link_gbps),
+                heap_pages=min(KV_HEAP_PAGES,
+                               (1 << 14) // args.clients // 2),
+                link={"latency_us": args.link_latency_us,
+                      "gbps": args.link_gbps},
                 faults=faults)
-            paged = PagedKVCache(num_pages=256, page_tokens=args.page_tokens,
-                                 kv_features=kv_features, box=cluster.box)
+            session = box.open(spec)
+            paged = session.kv_store(num_pages=256,
+                                     page_tokens=args.page_tokens,
+                                     kv_features=kv_features)
             for b in range(B):
                 paged.add_sequence(b)
 
@@ -162,34 +170,36 @@ def main() -> None:
                 import threading
 
                 def bg_pager(idx, n_pages=64):
-                    paging = cluster.pagings[idx]
+                    pager = session.pager(idx)
                     # per-thread generator: np.random.Generator is not
                     # thread-safe, and these threads run concurrently
                     r = np.random.default_rng(idx)
                     buf = r.integers(0, 255, 4096).astype(np.uint8)
                     t0 = time.perf_counter()
                     for pid in range(n_pages):
-                        paging.swap_out(pid, buf, wait=True)
+                        pager.swap_out(pid, buf, wait=True)
                     bg_rates[idx] = n_pages / (time.perf_counter() - t0)
 
                 bg_threads = [threading.Thread(target=bg_pager, args=(i,))
                               for i in range(1, args.clients)]
                 for t in bg_threads:
                     t.start()
-            paged.spill_sequence(0, cluster.donors[0])
-            paged.fetch_sequence(0, cluster.donors[0])
+            paged.spill(0)
+            paged.fetch(0)
             for t in bg_threads:
                 t.join()
-            st = cluster.box.stats()
-            print(f"spill/fetch: {st['nic']['rdma_ops']} RDMA ops, "
-                  f"merge drains {st['merge']['drains']}")
+            st = session.stats()
+            serving_nic = st["nic"][str(session.clients[0])]
+            merge = st["client"]["0"]["box"]["merge"]
+            print(f"spill/fetch: {serving_nic['rdma_ops']} RDMA ops, "
+                  f"merge drains {merge['drains']}")
             if bg_rates:
                 print("background clients (pages/s under contention):",
-                      {cluster.clients[i]: f"{r:,.0f}"
+                      {session.clients[i]: f"{r:,.0f}"
                        for i, r in sorted(bg_rates.items())})
-                service = cluster.fabric.stats()["service"]
-                print("donor-side per-client service:", service)
-            cluster.close()
+                print("donor-side per-client service:",
+                      st["fabric"]["service"])
+            session.close()
         print("SERVING DONE")
 
 

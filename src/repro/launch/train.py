@@ -70,11 +70,12 @@ def main() -> None:
             print(f"resumed from step {start_step}")
 
         offload_mgr = None
-        cluster = None
+        session = None
         if args.offload:
-            from repro.memory import MemoryCluster, OffloadManager
-            cluster = MemoryCluster(num_donors=3, donor_pages=1 << 16)
-            offload_mgr = OffloadManager(cluster.paging)
+            from repro import box
+            session = box.open(box.ClusterSpec(num_donors=3,
+                                               donor_pages=1 << 16))
+            offload_mgr = session.tensors()
 
         data = SyntheticTokens(DataConfig(
             vocab_size=cfg.vocab_size, seq_len=args.seq,
@@ -104,12 +105,14 @@ def main() -> None:
                   extra={"data_step": args.steps})
         if offload_mgr is not None:
             offload_mgr.flush()
-            st = cluster.box.stats()
-            print(f"offload: {st['nic']['rdma_ops']} RDMA ops, "
-                  f"{st['nic']['bytes_on_wire']/1e6:.1f} MB on wire, "
-                  f"merge drains {st['merge']['drains']} for "
-                  f"{st['merge']['submitted']} requests")
-            cluster.close()
+            st = session.stats()
+            nic = st["nic"][str(session.clients[0])]
+            merge = st["client"]["0"]["box"]["merge"]
+            print(f"offload: {nic['rdma_ops']} RDMA ops, "
+                  f"{nic['bytes_on_wire']/1e6:.1f} MB on wire, "
+                  f"merge drains {merge['drains']} for "
+                  f"{merge['submitted']} requests")
+            session.close()
         print("TRAINING DONE")
 
 

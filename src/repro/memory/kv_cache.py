@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .._deprecation import warn_once
 from ..core.descriptors import PAGE_SIZE
 from ..core.rdmabox import RDMABox
 
@@ -107,6 +108,11 @@ class PagedKVCache:
     def __init__(self, num_pages: int, page_tokens: int, kv_features: int,
                  dtype=np.float32, box: Optional[RDMABox] = None,
                  remote_base_page: int = 0) -> None:
+        if not getattr(self, "_box_internal", False):
+            warn_once(
+                "PagedKVCache",
+                "constructing PagedKVCache directly is deprecated; use "
+                "repro.box.open(spec).kv_store(...)")
         self.page_tokens = page_tokens
         self.kv_features = kv_features
         self.dtype = np.dtype(dtype)

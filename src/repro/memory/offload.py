@@ -15,6 +15,7 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from .._deprecation import warn_once
 from ..core.descriptors import PAGE_SIZE
 from ..core.paging import RemotePagingSystem
 
@@ -45,6 +46,11 @@ class OffloadConfig:
 class OffloadManager:
     def __init__(self, paging: RemotePagingSystem,
                  config: Optional[OffloadConfig] = None) -> None:
+        if not getattr(self, "_box_internal", False):
+            warn_once(
+                "OffloadManager",
+                "constructing OffloadManager directly is deprecated; use "
+                "repro.box.open(spec).tensors()")
         self.paging = paging
         self.cfg = config or OffloadConfig()
         self._meta: Dict[str, Dict] = {}

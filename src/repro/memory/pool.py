@@ -1,31 +1,27 @@
-"""Cluster fixture: the fabric-builder facade.
+"""``MemoryCluster`` — deprecation shim over ``repro.box``.
 
-Mirrors the paper's deployment (§7.1) and generalizes it: N client nodes
-running workloads, M remote peers donating DRAM, replication across
-donors — built on ``repro.fabric``: every node (clients *and* donors)
-gets its own simulated NIC, node pairs are joined by an explicit link
-model, and a ``FaultPlan`` scripts degraded-mode scenarios (donor crash,
-stragglers, transient errors, congestion).
-
-Multi-client mode (``num_clients > 1``) is the contention scenario the
-merge queue's admission control exists for: every client has its own
-``RDMABox`` (merge queue, poller, admission window) but they all share
-the donor nodes — contending for donor-region bandwidth and donor NIC
-processing, with deficit-round-robin fairness on the donor side. Each
-client's paging system gets a disjoint slice of every donor region so
-clients can never corrupt each other's pages. Defaults are
-API-compatible with the old single-client fixture (``.box``/``.paging``
-alias client 0), so existing callers keep working unchanged.
+The fabric-builder facade of PRs 1-3 survives with its full legacy
+surface (``.box``/``.paging``/``.boxes``/``.pagings``, fault
+choreography, flat ``stats()``), but it is now a thin veneer: the kwargs
+compile into a ``ClusterSpec`` and a ``repro.box.Session`` does the
+actual wiring. New code should call ``repro.box.open`` directly — the
+Session adds handle-based remote memory, policy-by-name selection, and
+the composed stats tree this shim cannot express.
 """
 
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Callable, List, Optional
 
-from ..core import (AdmissionHook, BoxConfig, DiskTier, RDMABox,
-                    RemotePagingSystem)
-from ..fabric import Fabric, FaultPlan, LinkConfig
+from .._deprecation import warn_once
+from ..core import (
+    AdmissionHook,
+    BoxConfig,
+    DiskTier,
+    RDMABox,
+    RemotePagingSystem,
+)
+from ..fabric import FaultPlan, LinkConfig
 
 
 class MemoryCluster:
@@ -43,75 +39,62 @@ class MemoryCluster:
                  admission_hook_factory: Optional[
                      Callable[[], AdmissionHook]] = None,
                  seed: int = 0) -> None:
-        assert num_clients >= 1
-        cfg = box_config or BoxConfig()
-        if num_clients > 1 and cfg.admission_hook is not None \
-                and admission_hook_factory is None:
-            raise ValueError(
-                "BoxConfig.admission_hook is one stateful object — sharing "
-                "it across clients would merge their latency signals; pass "
-                "admission_hook_factory so each client gets its own hook")
-        self.fabric = Fabric(cost=cfg.nic_cost, scale=cfg.nic_scale,
-                             kernel_space=cfg.kernel_space, link=link,
-                             faults=faults, seed=seed)
-        self.clients: List[int] = [client_node + i for i in range(num_clients)]
-        self.donors: List[int] = [client_node + num_clients + i
-                                  for i in range(num_donors)]
+        warn_once(
+            "MemoryCluster",
+            "MemoryCluster is deprecated; use repro.box.open(ClusterSpec(...)) "
+            "— see the README 'Public API' section for the migration map")
+        # deferred: repro.box imports repro.memory for the capability bases
+        from ..box import ClusterSpec, Session
+        spec = ClusterSpec(
+            num_donors=num_donors, donor_pages=donor_pages,
+            num_clients=num_clients, client_node=client_node,
+            replication=replication, stripe_pages=stripe_pages,
+            heap_pages=0,               # legacy layout: whole slice to paging
+            write_through_disk=write_through_disk,
+            first_responder=first_responder, evict_after=evict_after,
+            seed=seed)
+        self._session = Session(
+            spec,
+            box_config=box_config or BoxConfig(),
+            fault_plan=faults, link_config=link, disk=disk,
+            admission_hook_factory=admission_hook_factory)
+        self.fabric = self._session.fabric
+        self.clients: List[int] = self._session.clients
+        self.donors: List[int] = self._session.donors
         self.donor_pages = donor_pages
-        for node in self.donors:
-            self.fabric.add_node(node, donor_pages=donor_pages)
-        # each client gets its own engine + a disjoint slice of every
-        # donor region (placement is per-client, so slices must not overlap)
-        share = donor_pages // num_clients
-        self.boxes: List[RDMABox] = []
-        self.pagings: List[RemotePagingSystem] = []
-        for i, node in enumerate(self.clients):
-            client_cfg = cfg
-            if admission_hook_factory is not None:
-                client_cfg = replace(cfg, admission_hook=admission_hook_factory())
-            box = RDMABox(node, peers=self.donors, config=client_cfg,
-                          fabric=self.fabric)
-            self.boxes.append(box)
-            self.pagings.append(RemotePagingSystem(
-                box, donor_pages, replication=replication,
-                stripe_pages=stripe_pages, disk=disk,
-                write_through_disk=write_through_disk,
-                first_responder=first_responder, evict_after=evict_after,
-                region_base=i * share, region_pages=share))
+        self.boxes: List[RDMABox] = self._session._boxes
+        self.pagings: List[RemotePagingSystem] = self._session._pagings
         self.box = self.boxes[0]
         self.paging = self.pagings[0]
         self.directory = self.fabric.directory
 
-    # ---- fault choreography (delegates to the fabric) ----------------------
+    # ---- fault choreography (delegates to the session) ---------------------
     def crash_donor(self, node: int) -> None:
         """Mid-run donor crash: transfers to ``node`` start erroring with
         RETRY_EXC_ERR; the paging layer detects, strikes, and evicts."""
-        self.fabric.crash(node)
+        self._session.crash_donor(node)
 
     def recover_donor(self, node: int) -> None:
-        self.fabric.recover(node)
-        for paging in self.pagings:
-            paging.recover_node(node)
+        self._session.recover_donor(node)
 
     def congest_path(self, client: int, donor: int, factor: float,
                      until_us: Optional[float] = None) -> None:
         """Congestion episode on one client↔donor path — both directions,
         so the forward data leg AND the donor's ack leg degrade (the
         signal the congestion-aware admission hook reacts to)."""
-        self.fabric.congest(client, donor, factor, until_us=until_us)
-        self.fabric.congest(donor, client, factor, until_us=until_us)
+        self._session.congest_path(client, donor, factor, until_us=until_us)
 
     def clear_path(self, client: int, donor: int) -> None:
-        self.fabric.clear_congestion(client, donor)
-        self.fabric.clear_congestion(donor, client)
+        self._session.clear_path(client, donor)
 
     def flush(self, timeout: float = 30.0) -> None:
         """Drain every client engine: event-driven per-box flush (each box
         sleeps on its futures-table condition variable — no poll loop)."""
-        for box in self.boxes:
-            box.flush(timeout=timeout)
+        self._session.flush(timeout=timeout)
 
     def stats(self) -> dict:
+        """Legacy flat shape; ``repro.box.Session.stats()`` returns the
+        namespaced tree instead."""
         out = {"box": self.box.stats(), "paging": self.paging.stats(),
                "fabric": self.fabric.stats()}
         if len(self.boxes) > 1:
@@ -122,9 +105,7 @@ class MemoryCluster:
         return out
 
     def close(self) -> None:
-        for box in self.boxes:
-            box.close()
-        self.fabric.close()
+        self._session.close()
 
     def __enter__(self) -> "MemoryCluster":
         return self

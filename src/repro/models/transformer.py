@@ -18,7 +18,7 @@ from . import attention as attn_mod
 from . import mla as mla_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
-from .layers import SpecTree, init_mlp, init_norm, apply_mlp, rms_norm
+from .layers import SpecTree, apply_mlp, init_mlp, init_norm, rms_norm
 
 PyTree = Any
 

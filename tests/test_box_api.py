@@ -1,0 +1,368 @@
+"""Lifecycle, spec, policy-registry, and stats-tree tests for the
+``repro.box`` public API (plus the deprecation shims and the ECN-mark
+admission satellite)."""
+
+import re
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.box as box
+from repro._deprecation import reset as reset_deprecation
+from repro.core import PAGE_SIZE
+
+FAST = dict(nic_scale=1e-7, window_bytes=1 << 20)
+
+
+def small_spec(**kw):
+    base = dict(num_donors=3, donor_pages=2048, heap_pages=256,
+                replication=2, **FAST)
+    base.update(kw)
+    return box.ClusterSpec(**base)
+
+
+PAGE = np.arange(PAGE_SIZE, dtype=np.uint8)
+
+
+# ---- ClusterSpec ----------------------------------------------------------
+def test_spec_round_trips_through_json():
+    spec = box.ClusterSpec(
+        num_donors=4, donor_pages=4096, num_clients=2, replication=2,
+        heap_pages=128, link={"latency_us": 5.0, "gbps": 56.0},
+        faults=[{"kind": "slow", "node": 3, "factor": 25.0},
+                {"kind": "crash", "node": 4, "after_ops": 100}],
+        admission={"name": "congestion", "params": {"shrink": 0.25}},
+        polling={"name": "event_batch", "params": {"batch": 8}},
+        nic_cost={"wire_us_per_page": 0.1})
+    assert box.ClusterSpec.from_json(spec.to_json()) == spec
+    assert box.ClusterSpec.from_dict(spec.to_dict()) == spec
+    # policy refs coerce from bare strings too
+    assert box.ClusterSpec(admission="static").admission == \
+        box.PolicySpec("static")
+
+
+def test_spec_rejects_unknown_fields_and_bad_layout():
+    with pytest.raises(ValueError, match="unknown ClusterSpec fields"):
+        box.ClusterSpec.from_dict({"num_donorz": 3})
+    with pytest.raises(ValueError, match="heap_pages"):
+        box.open(box.ClusterSpec(donor_pages=1024, num_clients=2,
+                                 heap_pages=1024))
+
+
+def test_open_accepts_dict_and_field_overrides():
+    with box.open({"num_donors": 2, "donor_pages": 1024, **FAST},
+                  replication=1) as session:
+        assert session.spec.num_donors == 2
+        assert session.spec.replication == 1
+
+
+# ---- lifecycle ------------------------------------------------------------
+def test_double_close_is_noop_and_capabilities_raise_closed():
+    session = box.open(small_spec())
+    heap, pager, tensors = session.heap(), session.pager(), session.tensors()
+    kv = session.kv_store(num_pages=8, page_tokens=4, kv_features=8)
+    buf = heap.alloc(PAGE_SIZE)
+    buf.write(PAGE).wait(10)
+    engine = session.engine()
+    session.close()
+    session.close()                      # idempotent
+    for fn in (lambda: session.engine(),
+               lambda: session.heap(),
+               lambda: session.stats(),
+               lambda: session.flush(),
+               lambda: heap.alloc(PAGE_SIZE),
+               lambda: buf.write(PAGE),
+               lambda: buf.readv([(0, np.empty(PAGE_SIZE, np.uint8))]),
+               lambda: pager.swap_out(0, PAGE),
+               lambda: pager.swap_in(0),
+               lambda: tensors.offload("x", PAGE),
+               lambda: kv.add_sequence(0),
+               lambda: kv.spill(0),
+               lambda: engine.write(session.donors[0], 0, PAGE),
+               lambda: engine.write_pages(session.donors[0], [(0, PAGE)])):
+        with pytest.raises(box.ClosedError):
+            fn()
+
+
+def test_close_fails_inflight_futures_with_closed_error():
+    """Satellite: RDMABox.close() with a batch in flight must fail the
+    outstanding futures with ClosedError, not strand waiters until the
+    flush timeout."""
+    spec = small_spec(heap_pages=512, nic_scale=1e-6,
+                      link={"latency_us": 300000.0})   # 0.3s on the wire
+    session = box.open(spec)
+    buf = session.heap().alloc(16 * PAGE_SIZE)
+    data = np.zeros(16 * PAGE_SIZE, np.uint8)
+    batch = buf.writev([(i, data[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
+                        for i in range(16)])
+    single = buf.write(data[:PAGE_SIZE])
+    assert not batch.done()
+    session.close()
+    with pytest.raises(box.ClosedError):
+        batch.wait(1.0)
+    with pytest.raises(box.ClosedError):
+        batch.errors(1.0)
+    with pytest.raises(box.ClosedError):
+        single.wait(1.0)
+    assert single.done() and batch.done()
+
+
+# ---- capabilities ---------------------------------------------------------
+def test_remote_heap_alloc_write_read_free_cycle():
+    with box.open(small_spec()) as session:
+        heap = session.heap()
+        buf = heap.alloc(4 * PAGE_SIZE)
+        data = np.arange(4 * PAGE_SIZE, dtype=np.uint8)
+        buf.writev([(i, data[i * PAGE_SIZE:(i + 1) * PAGE_SIZE])
+                    for i in range(4)]).wait(10)
+        assert np.array_equal(buf.read(), data)
+        # partial read at an offset
+        assert np.array_equal(buf.read(page_offset=1, num_pages=1),
+                              data[PAGE_SIZE:2 * PAGE_SIZE])
+        buf.free()
+        buf.free()                      # idempotent
+        with pytest.raises(box.ClosedError):
+            buf.write(PAGE)
+        # the span coalesced back into the free list
+        snap = heap.snapshot()
+        assert snap["live_buffers"] == 0
+        assert all(v == session.spec.heap_pages
+                   for v in snap["free_pages"].values())
+        # exhaustion raises AllocError, not a silent overlap
+        with pytest.raises(box.AllocError):
+            heap.alloc(session.spec.heap_pages * PAGE_SIZE * 4)
+        with pytest.raises(box.AllocError):
+            heap.alloc(0)
+
+
+def test_heap_disabled_when_spec_reserves_no_pages():
+    with box.open(small_spec(heap_pages=0)) as session:
+        with pytest.raises(box.AllocError):
+            session.heap().alloc(PAGE_SIZE)
+
+
+def test_pager_and_tensor_store_roundtrip():
+    with box.open(small_spec()) as session:
+        pager = session.pager()
+        pager.swap_out(5, PAGE, wait=True)
+        assert np.array_equal(pager.swap_in(5), PAGE)
+        primary = pager.replicas(5)[0][0]
+        pager.fail_node(primary)
+        assert np.array_equal(pager.swap_in(5), PAGE)   # replica failover
+        store = session.tensors()
+        arr = np.random.default_rng(0).normal(size=(37, 11)).astype(np.float32)
+        store.offload("opt/m", arr, wait=True)
+        assert np.array_equal(store.fetch("opt/m"), arr)
+
+
+def test_kv_store_spills_into_heap_arena():
+    with box.open(small_spec(heap_pages=512)) as session:
+        kv = session.kv_store(num_pages=16, page_tokens=4, kv_features=8)
+        kv.add_sequence(0)
+        rng = np.random.default_rng(1)
+        kv.append_tokens(0, rng.normal(size=(10, 8)).astype(np.float32))
+        before = kv.gather(0).copy()
+        kv.spill(0)
+        kv.fetch(0)
+        assert np.array_equal(kv.gather(0), before)
+        assert kv.remote_base >= 2048 - 512   # arena lives in the heap slice
+
+
+def test_kv_spill_cannot_corrupt_heap_buffers():
+    """The KV arena is RESERVED from the heap: spills land in pages the
+    heap can no longer hand out, a second store gets a disjoint arena,
+    and exhausting the arena raises instead of walking out of it."""
+    with box.open(small_spec(heap_pages=512)) as session:
+        heap = session.heap()
+        buf = heap.alloc(4 * PAGE_SIZE)
+        data = np.arange(4 * PAGE_SIZE, dtype=np.uint8)
+        buf.write(data).wait(10)
+        kv = session.kv_store(num_pages=16, page_tokens=4, kv_features=8)
+        kv2 = session.kv_store(num_pages=16, page_tokens=4, kv_features=8)
+        assert kv2.remote_base >= kv.remote_base + 16   # disjoint arenas
+        for store, seq in ((kv, 0), (kv2, 0)):
+            store.add_sequence(seq)
+            store.append_tokens(
+                seq, np.ones((16, 8), np.float32) * (seq + 1))
+            store.spill(seq, donor=buf.donor)
+        assert np.array_equal(buf.read(), data), \
+            "KV spill overwrote a live heap buffer"
+        # arena exhaustion is loud, not silent corruption
+        kv.fetch(0)
+        with pytest.raises(box.AllocError, match="arena exhausted"):
+            for _ in range(16):          # re-spills bump, never recycle
+                kv.spill(0, donor=buf.donor)
+                kv.fetch(0)
+
+
+# ---- policy registries ----------------------------------------------------
+def test_policies_selected_by_name():
+    spec = small_spec(admission="congestion", polling="event_batch",
+                      batching="doorbell")
+    with box.open(spec) as session:
+        from repro.core import BatchPolicy, CongestionAwareHook, PollMode
+        engine = session.engine()
+        assert isinstance(engine.admission.hook, CongestionAwareHook)
+        assert engine.cfg.poll.mode is PollMode.EVENT_BATCH
+        assert engine.cfg.batch_policy is BatchPolicy.DOORBELL
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        box.open(small_spec(admission="no-such-policy"))
+
+
+def test_third_party_placement_registers_via_decorator():
+    @box.register_policy("placement", "first-donor-only")
+    class FirstDonorOnly:
+        """Single replica, always on the first donor (test policy)."""
+
+        def capacity_pages(self, ps):
+            return ps.replica_region
+
+        def replicas(self, ps, page_id):
+            return [(ps.donors[0], ps.region_base + page_id)]
+
+    assert "first-donor-only" in box.policy_names("placement")
+    with box.open(small_spec(placement="first-donor-only")) as session:
+        pager = session.pager()
+        assert pager.replicas(3) == [(session.donors[0], 3)]
+        pager.swap_out(3, PAGE, wait=True)
+        assert np.array_equal(pager.swap_in(3), PAGE)
+
+
+# ---- the one stats tree ---------------------------------------------------
+def test_stats_tree_has_all_namespaces_populated():
+    with box.open(small_spec(num_clients=2)) as session:
+        for i in range(2):
+            session.pager(i).swap_out(0, PAGE, wait=True)
+        session.heap().alloc(PAGE_SIZE)
+        st = session.stats()
+        assert set(st) >= {"fabric", "nic", "client", "paging"}
+        assert st["fabric"]["faults"]["injected"] == 0
+        assert st["fabric"]["service"], "donor-side service accounting empty"
+        # every node (2 clients + 3 donors) has a NIC namespace
+        assert set(st["nic"]) == {str(n) for n in range(5)}
+        assert st["nic"]["0"]["wqes_posted"] > 0
+        for i in ("0", "1"):
+            assert st["client"][i]["box"]["merge"]["submitted"] > 0
+            assert "admission" in st["client"][i]["box"]
+        assert st["client"]["0"]["heap"]["live_buffers"] == 1
+        assert st["paging"] == st["client"]["0"]["paging"]
+        flat = session.stats(flat=True)
+        assert flat["client.0.box.merge.submitted"] > 0
+        assert any(k.startswith("nic.3.") for k in flat)
+
+
+# ---- ECN marks (satellite) ------------------------------------------------
+def test_ecn_marks_shrink_window_without_latency_signal():
+    """The link's congestion multiplier surfaces as an ECN-style mark on
+    WorkCompletion, and CongestionAwareHook shrinks on marks even when
+    the latency-EWMA condition can never fire (latency_factor=1e9)."""
+    spec = small_spec(
+        num_donors=1, replication=1, heap_pages=0,
+        admission={"name": "congestion",
+                   "params": {"latency_factor": 1e9, "calibration": 4,
+                              "adjust_every": 4}})
+    with box.open(spec) as session:
+        pager = session.pager()
+        hook = session.engine().admission.hook
+        donor = session.donors[0]
+        for pid in range(12):
+            pager.swap_out(pid, PAGE, wait=True)
+        assert hook.window_fraction == 1.0
+        session.congest_path(session.clients[0], donor, 20.0)
+        marked = []
+        session.engine().write(donor, 100, PAGE,
+                               callback=lambda wc: marked.append(wc.ecn_mult)
+                               ).wait(10)
+        assert marked and marked[0] > 1.0 and marked[0] == pytest.approx(20.0)
+        for pid in range(16):
+            pager.swap_out(pid, PAGE, wait=True)
+        snap = hook.snapshot()
+        assert snap["ecn_marks"] > 0
+        assert hook.window_fraction < 1.0, \
+            f"window never shrank on ECN marks alone: {snap}"
+        session.clear_path(session.clients[0], donor)
+        for pid in range(32):
+            pager.swap_out(pid % 12, PAGE, wait=True)
+        assert hook.window_fraction > snap["window_fraction"]
+
+
+def test_ecn_insensitive_hook_ignores_marks():
+    from repro.core import CongestionAwareHook
+    from repro.core.descriptors import Verb, WorkCompletion
+    hook = CongestionAwareHook(latency_factor=1e9, calibration=2,
+                               adjust_every=2, ecn_sensitive=False)
+    for i in range(20):
+        hook.observe(WorkCompletion(wr_id=i, verb=Verb.WRITE, dest_node=1,
+                                    nbytes=PAGE_SIZE, post_vtime_us=0.0,
+                                    complete_vtime_us=10.0, ecn_mult=8.0))
+    assert hook.window_fraction == 1.0
+    assert hook.snapshot()["ecn_marks"] == 20
+
+
+# ---- deprecation shims ----------------------------------------------------
+def test_shims_warn_exactly_once():
+    from repro.memory import MemoryCluster, OffloadManager
+    reset_deprecation("MemoryCluster")
+    reset_deprecation("OffloadManager")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        c1 = MemoryCluster(num_donors=2, donor_pages=512)
+        c1.close()
+        c2 = MemoryCluster(num_donors=2, donor_pages=512)
+        OffloadManager(c2.paging)
+        OffloadManager(c2.paging)
+        c2.close()
+    deps = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len([w for w in deps if "MemoryCluster" in str(w.message)]) == 1
+    assert len([w for w in deps if "OffloadManager" in str(w.message)]) == 1
+
+
+def test_shim_still_serves_the_legacy_surface():
+    from repro.memory import MemoryCluster
+    with MemoryCluster(num_donors=2, donor_pages=1024) as c:
+        c.paging.swap_out(1, PAGE, wait=True)
+        assert np.array_equal(c.paging.swap_in(1), PAGE)
+        st = c.stats()
+        assert {"box", "paging", "fabric"} <= set(st)
+        assert st["box"]["merge"]["submitted"] > 0
+
+
+def test_session_never_warns_deprecation():
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with box.open(small_spec()) as session:
+            session.pager().swap_out(0, PAGE, wait=True)
+            session.tensors()
+            session.kv_store(num_pages=4, page_tokens=2, kv_features=4)
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ---- public-surface guard (CI satellite) ----------------------------------
+EXPECTED_ALL = {
+    "AllocError", "BatchFuture", "BatchTransferError", "BoxError",
+    "ClosedError", "ClusterSpec", "KVStore", "PAGE_SIZE", "Pager",
+    "PolicySpec", "RemoteBuffer", "RemoteHeap", "Session", "TensorStore",
+    "TransferError", "TransferFuture", "create_policy", "flatten_stats",
+    "open", "policy_names", "register_policy",
+}
+
+
+def test_public_all_matches_documented_names():
+    assert set(box.__all__) == EXPECTED_ALL
+    for name in box.__all__:
+        assert getattr(box, name) is not None
+    # every public name appears in the README's Public API section
+    import pathlib
+    readme = (pathlib.Path(__file__).resolve().parent.parent
+              / "README.md").read_text()
+    section = re.search(r"## Public API\n(.*?)(?:\n## |\Z)", readme,
+                        flags=re.S)
+    assert section, "README.md lost its 'Public API' section"
+    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_.]*)`",
+                                section.group(1)))
+    missing = {n for n in EXPECTED_ALL
+               if n not in documented
+               and f"box.{n}" not in documented}
+    assert not missing, f"undocumented public names: {sorted(missing)}"

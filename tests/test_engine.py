@@ -5,9 +5,9 @@ import threading
 import numpy as np
 import pytest
 
-from repro.core import (BatchPolicy, BatchTransferError, BoxConfig,
-                        PollConfig, PollMode, RDMABox, RegionDirectory,
-                        RemotePagingSystem, RemoteRegion, PAGE_SIZE)
+from repro.core import (PAGE_SIZE, BatchPolicy, BatchTransferError,
+                        BoxConfig, PollConfig, PollMode, RDMABox,
+                        RegionDirectory, RemotePagingSystem, RemoteRegion)
 
 
 def make_box(poll_mode=PollMode.ADAPTIVE, scq=0, policy=BatchPolicy.HYBRID,

@@ -10,9 +10,8 @@ import time
 import numpy as np
 import pytest
 
-from repro.core import (BoxConfig, RDMABox,
-                        RegionDirectory, RemoteRegion,
-                        TransferError, WCStatus, PAGE_SIZE)
+from repro.core import (PAGE_SIZE, BoxConfig, RDMABox, RegionDirectory,
+                        RemoteRegion, TransferError, WCStatus)
 from repro.fabric import Fabric, FaultPlan, LinkConfig
 from repro.memory import MemoryCluster, OffloadConfig, OffloadManager
 

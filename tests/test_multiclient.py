@@ -12,8 +12,8 @@ import time
 
 import numpy as np
 
-from repro.core import (BoxConfig, CongestionAwareHook, RDMABox,
-                        TransferError, WCStatus, PAGE_SIZE)
+from repro.core import (PAGE_SIZE, BoxConfig, CongestionAwareHook, RDMABox,
+                        TransferError, WCStatus)
 from repro.fabric import Fabric, FaultPlan, FaultState, LinkConfig
 from repro.memory import MemoryCluster, OffloadConfig, OffloadManager
 

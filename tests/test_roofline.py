@@ -2,9 +2,9 @@
 
 import pytest
 
+from repro.configs import SHAPES, get_config
 from repro.core import RegMode, resolve_reg_mode
 from repro.roofline.analysis import RooflineReport, model_flops_for
-from repro.configs import SHAPES, get_config
 
 
 def _rep(**kw):

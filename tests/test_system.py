@@ -1,9 +1,9 @@
 """End-to-end system tests: train loop, checkpoint/resume, sharding rules,
 optimizer, data determinism, HLO analyzer."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import RunConfig, get_reduced
