@@ -74,8 +74,10 @@ def run_shared(num_clients: int, pages: int) -> dict:
         for t in ts:
             t.join()
         donor = c.donors[0]
-        service = c.stats()["fabric"]["service"].get(donor, {})
-        return {"rates": rates, "service": service}
+        stats = c.stats()
+        service = stats["fabric"]["service"].get(donor, {})
+        plane = stats["nic"][str(donor)]["service"]
+        return {"rates": rates, "service": service, "plane": plane}
 
 
 def scenario_fair_share() -> list:
@@ -86,11 +88,15 @@ def scenario_fair_share() -> list:
         f"per-client throughput skew {ratio:.2f}x breaches " \
         f"fairness bound {FAIRNESS_BOUND}x: {r['rates']}"
     served = {cl: s["bytes"] for cl, s in r["service"].items()}
+    plane = r["plane"]          # fairness must hold WITH parallel service
     return [csv_row(
         "multiclient/fair_share", 1e6 / max(min(rates), 1e-9),
         f"client_pages_s={[f'{x:.0f}' for x in rates]};"
         f"skew={ratio:.2f}x;bound={FAIRNESS_BOUND}x;"
-        f"donor_served_bytes={served}")]
+        f"donor_served_bytes={served};"
+        f"serve_workers={plane['serve_workers']};"
+        f"merged_runs={plane['merged_runs']};"
+        f"coalesced_acks={plane['coalesced_acks']}")]
 
 
 def scenario_contention_cost() -> list:

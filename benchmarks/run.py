@@ -5,8 +5,8 @@ Prints ``name,us_per_call,derived`` CSV. Run:
       [--json results.json]
 
 ``--quick`` sets ``RDMABOX_BENCH_QUICK=1`` before importing modules;
-benchmarks that honor it (bench_faults, bench_multiclient) shrink their
-workloads for CI smoke runs. ``--json`` additionally writes the rows as
+benchmarks that honor it (bench_faults, bench_multiclient,
+bench_donor_scaling) shrink their workloads for CI smoke runs. ``--json`` additionally writes the rows as
 a JSON document (the artifact CI uploads per PR for the perf trajectory).
 """
 
@@ -29,6 +29,7 @@ MODULES = [
     "benchmarks.bench_paging",           # Figs. 12/13
     "benchmarks.bench_faults",           # degraded-mode: crash/straggler/disk
     "benchmarks.bench_multiclient",      # shared donors: fairness + congestion
+    "benchmarks.bench_donor_scaling",    # donor service plane: workers scaling
     "benchmarks.bench_serving",          # Fig. 14
     "benchmarks.bench_paged_attention",  # TPU kernel embodiment
 ]

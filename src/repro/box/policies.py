@@ -14,6 +14,10 @@ config change, not rewiring:
   Built-ins: ``single``, ``doorbell``, ``batch_on_mr``, ``hybrid``.
 * ``placement``  — the paging layer's replica layout.
   Built-in: ``striped`` (the paper's layout).
+* ``service``    — the donor-side service plane (returns a
+  ``ServiceConfig``): DRR quantum, worker count, donor-side job merging
+  and ack coalescing. Built-in: ``drr``. ``ClusterSpec.serve_workers``
+  overrides the worker count without replacing the policy.
 
 Third-party policies register via the decorator::
 
@@ -31,11 +35,12 @@ from typing import Any, Callable, Dict, List, Optional
 
 from ..core.admission import AdmissionHook, CongestionAwareHook
 from ..core.batching import BatchPolicy
+from ..core.nic import ServiceConfig
 from ..core.paging import StripedPlacement
 from ..core.polling import PollConfig, PollMode
 from .spec import PolicySpec
 
-POLICY_KINDS = ("admission", "polling", "batching", "placement")
+POLICY_KINDS = ("admission", "polling", "batching", "placement", "service")
 
 _REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {
     kind: {} for kind in POLICY_KINDS
@@ -109,3 +114,7 @@ for _policy in BatchPolicy:
 
 # ---- built-in placement policies ------------------------------------------
 register_policy("placement", "striped")(StripedPlacement)
+
+
+# ---- built-in service-plane policies ---------------------------------------
+register_policy("service", "drr")(ServiceConfig)

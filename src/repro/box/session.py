@@ -31,7 +31,7 @@ import numpy as np
 from ..core.admission import AdmissionHook
 from ..core.descriptors import PAGE_SIZE, RegMode
 from ..core.errors import ClosedError
-from ..core.nic import NICCostModel
+from ..core.nic import NICCostModel, ServiceConfig
 from ..core.paging import DiskTier, RemotePagingSystem
 from ..core.rdmabox import BoxConfig, RDMABox
 from ..fabric import Fabric, FaultPlan, LinkConfig
@@ -97,6 +97,21 @@ class Session:
                 cfg = replace(cfg, app_handler=app_handler)
         self._cfg = cfg
 
+        # donor-side service plane: the ``service`` policy supplies the
+        # ServiceConfig (DRR quantum, merging, ack coalescing); the
+        # ``serve_workers`` engine knob overrides its worker count
+        service = create_policy("service", spec.service)
+        if spec.serve_workers is not None:
+            if not isinstance(service, ServiceConfig):
+                # a silent no-op would leave the pool sized by the custom
+                # policy while the spec (and stats readers) expect N
+                raise ValueError(
+                    f"serve_workers={spec.serve_workers} only applies to "
+                    f"ServiceConfig-based service policies; the "
+                    f"{spec.service.name!r} policy is a "
+                    f"{type(service).__name__} — set its worker count via "
+                    f"the policy's own params instead")
+            service = replace(service, workers=spec.serve_workers)
         self.fabric = Fabric(
             cost=cfg.nic_cost, scale=cfg.nic_scale,
             kernel_space=cfg.kernel_space,
@@ -104,7 +119,8 @@ class Session:
             else spec.link_config(),
             faults=fault_plan if fault_plan is not None
             else spec.fault_plan(),
-            seed=spec.seed)
+            seed=spec.seed,
+            service=service)
         self.directory = self.fabric.directory
         self.clients: List[int] = [spec.client_node + i
                                    for i in range(spec.num_clients)]

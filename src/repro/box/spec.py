@@ -141,6 +141,10 @@ class ClusterSpec:
     rnr_retry_limit: int = 3
     rnr_backoff_us: float = 200.0
     nic_cost: Optional[Dict[str, float]] = None   # NICCostModel overrides
+    # donor-side service workers per NIC (None → one per modeled PU);
+    # finer service-plane knobs (DRR quantum, merging, ack coalescing)
+    # live on the ``service`` policy below
+    serve_workers: Optional[int] = None
     # link model ({"latency_us": .., "gbps": .., "jitter_us": ..})
     link: Optional[Dict[str, Any]] = None
     # fault script (list of event dicts, see fault_plan_from_dicts)
@@ -155,8 +159,11 @@ class ClusterSpec:
         default_factory=lambda: PolicySpec("hybrid"))
     placement: PolicySpec = field(
         default_factory=lambda: PolicySpec("striped"))
+    service: PolicySpec = field(
+        default_factory=lambda: PolicySpec("drr"))
 
-    _POLICY_FIELDS = ("admission", "polling", "batching", "placement")
+    _POLICY_FIELDS = ("admission", "polling", "batching", "placement",
+                      "service")
 
     def __post_init__(self) -> None:
         for name in self._POLICY_FIELDS:
@@ -170,6 +177,9 @@ class ClusterSpec:
             raise ValueError("num_clients must be >= 1")
         if self.replication < 1:
             raise ValueError("replication must be >= 1")
+        if self.serve_workers is not None and self.serve_workers < 1:
+            raise ValueError("serve_workers must be >= 1 (or None for "
+                             "one worker per modeled PU)")
         share = self.donor_pages // self.num_clients
         if not 0 <= self.heap_pages <= share:
             raise ValueError(

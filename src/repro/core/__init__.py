@@ -21,7 +21,7 @@ from .descriptors import (
 )
 from .errors import AllocError, BoxError, ClosedError
 from .merge_queue import MergeQueue
-from .nic import NICCostModel, SimulatedNIC
+from .nic import NICCostModel, ServiceConfig, SimulatedNIC
 from .paging import DiskTier, PrefetchBatch, RemotePagingSystem, StripedPlacement
 from .polling import PollConfig, Poller, PollMode
 from .rdmabox import (

@@ -37,9 +37,18 @@ class CompletionQueue:
 
     # ---- producer side (NIC) -------------------------------------------
     def post(self, wc: WorkCompletion) -> None:
+        self.post_many([wc])
+
+    def post_many(self, wcs: List[WorkCompletion]) -> None:
+        """Batched post: the whole list appends under ONE lock acquisition
+        and fires at most ONE event — the CQ side of donor-side ack
+        coalescing (N jobs completed in one service round cost the
+        consumer one interrupt context, not N)."""
+        if not wcs:
+            return
         with self._lock:
-            self._items.append(wc)
-            self.posted.add()
+            self._items.extend(wcs)
+            self.posted.add(len(wcs))
             if self._armed:
                 self._armed = False
                 self.events_fired.add()

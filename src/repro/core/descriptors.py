@@ -15,6 +15,7 @@ from __future__ import annotations
 import enum
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional
 
@@ -119,6 +120,28 @@ class WorkCompletion:
     # admission policies react to explicit fabric state instead of
     # inferring it from latency alone.
     ecn_mult: float = 1.0
+
+    @classmethod
+    def for_descriptor(cls, desc: "TransferDescriptor", status: "WCStatus", *,
+                       post_v: float, complete_v: float, post_r: float,
+                       ecn_mult: float = 1.0) -> "WorkCompletion":
+        """The one construction point for NIC completion paths (client-side,
+        donor-served, donor-failed): every WC derived from a posted
+        descriptor is built here, so a new WC field cannot silently diverge
+        across the three paths again."""
+        return cls(
+            wr_id=desc.requests[0].wr_id if desc.requests else -1,
+            verb=desc.verb,
+            dest_node=desc.dest_node,
+            nbytes=desc.nbytes,
+            status=status,
+            post_vtime_us=post_v,
+            complete_vtime_us=complete_v,
+            post_rtime=post_r,
+            complete_rtime=time.perf_counter(),
+            requests=desc.requests,
+            ecn_mult=ecn_mult,
+        )
 
     @property
     def ecn(self) -> bool:

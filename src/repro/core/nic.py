@@ -31,7 +31,7 @@ import collections
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -52,6 +52,28 @@ from .region import RegionDirectory
 # served per round before the donor rotates to the next attached client
 ACK_BYTES = 64
 DRR_QUANTUM_BYTES = 16 * PAGE_SIZE
+
+
+@dataclass
+class ServiceConfig:
+    """Donor-side service-plane policy (the ``service`` policy kind).
+
+    ``workers=None`` sizes the worker pool to the cost model's
+    ``num_pus`` — one service worker per NIC processing unit, each pinned
+    to its own ingress PU pacer so intra-donor service parallelism is
+    bounded by the modeled PU count, not by thread count. ``merge`` and
+    ``coalesce_acks`` gate the two receive-side batching optimizations
+    (the paper's request-merging idea applied to the serve path); both
+    are on by default and exist as knobs so their effect is measurable.
+    """
+
+    quantum_bytes: int = DRR_QUANTUM_BYTES   # DRR deficit per visit
+    merge: bool = True            # drain a deficit's worth as ONE vector
+    coalesce_acks: bool = True    # one ack transmit + CQ post per round
+    workers: Optional[int] = None  # service workers (None → cost.num_pus)
+
+    def num_workers(self, num_pus: int) -> int:
+        return max(1, self.workers if self.workers is not None else num_pus)
 
 
 @dataclass
@@ -203,9 +225,11 @@ class SimulatedNIC:
     """One node's NIC: PU worker threads + shared wire + WQE cache model.
 
     When the NIC belongs to a fabric it also *serves* inbound transfers:
-    clients hand descriptors to the destination NIC, which services them
-    with deficit-round-robin fairness across requesting clients (see
-    ``_DonorJob``)."""
+    clients hand descriptors to the destination NIC, where a
+    deficit-round-robin dispatcher feeds ``service.workers`` service
+    workers (each pinned to one ingress PU pacer), so intra-donor service
+    parallelism matches the modeled PU count while the shared egress wire
+    stays the one honest contention point (see ``_DonorJob``)."""
 
     def __init__(
         self,
@@ -216,6 +240,7 @@ class SimulatedNIC:
         kernel_space: bool = True,
         fabric=None,
         origin: Optional[float] = None,
+        service: Optional[ServiceConfig] = None,
     ) -> None:
         self.node_id = node_id
         self.directory = directory
@@ -231,23 +256,33 @@ class SimulatedNIC:
         self._wire = Pacer(scale, origin)
         self._pu_pacers = [Pacer(scale, origin) for _ in range(self.cost.num_pus)]
         self._poster_pacer = Pacer(scale, origin)
-        self._pu_queues: List[List] = [[] for _ in range(self.cost.num_pus)]
+        self._pu_queues: List[Deque] = [collections.deque()
+                                        for _ in range(self.cost.num_pus)]
         self._pu_cv = [threading.Condition() for _ in range(self.cost.num_pus)]
         self._outstanding = AtomicCounter()
         self._running = True
         self._started = False
         self._start_lock = threading.Lock()
         self._threads: List[threading.Thread] = []
-        # donor-side service: per-client job queues drained by one lazily
-        # started thread with deficit-round-robin fairness
+        # donor-side service plane: per-client job queues, a DRR dispatcher
+        # (_next_run_locked), and lazily started service workers
+        self.service = service or ServiceConfig()
+        self.serve_workers = self.service.num_workers(self.cost.num_pus)
         self._serve_cv = threading.Condition()
         self._serve_queues: Dict[int, Deque[_DonorJob]] = {}
         self._serve_order: List[int] = []
         self._serve_deficit: Dict[int, int] = {}
+        self._serve_busy: set = set()   # clients with a run in flight
         self._serve_idx = 0
-        self._serve_pu = 0
         self._served: Dict[int, List[int]] = {}    # client -> [ops, bytes]
-        self._serve_thread: Optional[threading.Thread] = None
+        self._served_by_worker: List[List[int]] = \
+            [[0, 0] for _ in range(self.serve_workers)]
+        self._serve_rounds = 0          # dispatch counters (serve_cv held)
+        self._merged_runs = 0
+        self._merged_jobs = 0
+        self._coalesced_acks = AtomicCounter()
+        self._coalesced_jobs = AtomicCounter()
+        self._serve_threads: List[threading.Thread] = []
 
     def _ensure_started(self) -> None:
         """PU worker threads spawn on first post — a fabric full of idle
@@ -338,8 +373,16 @@ class SimulatedNIC:
             self._serve_cv.notify_all()
         for t in self._threads:
             t.join(timeout=2.0)
-        if self._serve_thread is not None:
-            self._serve_thread.join(timeout=2.0)
+        for t in self._serve_threads:
+            t.join(timeout=2.0)
+        # whatever is still queued (workers never started, or a worker is
+        # stuck past its join timeout) fails now — never dropped silently
+        with self._serve_cv:
+            leftover = [j for q in self._serve_queues.values() for j in q]
+            for q in self._serve_queues.values():
+                q.clear()
+        for j in leftover:
+            self._fail_job(j)
 
     # ---- NIC processing units --------------------------------------------
     def _pu_loop(self, pu: int) -> None:
@@ -352,7 +395,7 @@ class SimulatedNIC:
                     cv.wait(timeout=0.1)
                 if not self._running and not queue:
                     return
-                qp, desc, post_v, post_r = queue.pop(0)
+                qp, desc, post_v, post_r = queue.popleft()
             self._process(pu, pacer, qp, desc, post_v, post_r)
 
     def _process(self, pu: int, pacer: Pacer, qp: QueuePair,
@@ -415,19 +458,9 @@ class SimulatedNIC:
         # injected fault (crash / transient): the data never moves
         pacer.charge(cost.completion_dma_us)
         self._outstanding.add(-1)  # one WQE retired
-        wc = WorkCompletion(
-            wr_id=desc.requests[0].wr_id if desc.requests else -1,
-            verb=desc.verb,
-            dest_node=desc.dest_node,
-            nbytes=desc.nbytes,
-            status=status,
-            post_vtime_us=post_v,
-            complete_vtime_us=complete_v,
-            post_rtime=post_r,
-            complete_rtime=time.perf_counter(),
-            requests=desc.requests,
-            ecn_mult=mult,
-        )
+        wc = WorkCompletion.for_descriptor(
+            desc, status, post_v=post_v, complete_v=complete_v,
+            post_r=post_r, ecn_mult=mult)
         self.stats.completions.add(1)
         if status != WCStatus.SUCCESS:
             self.stats.wc_errors.add(1)
@@ -438,6 +471,26 @@ class SimulatedNIC:
         else:
             qp.cq.post(wc)
 
+    @staticmethod
+    def _write_parts(desc: TransferDescriptor) -> List:
+        """(page, data) parts of one WRITE descriptor — the ONE place the
+        payload-is-None filter lives (shared by the client-side and
+        merged donor-side move paths)."""
+        return [(req.remote_addr, req.payload)
+                for req in desc.requests if req.payload is not None]
+
+    @staticmethod
+    def _read_parts(desc: TransferDescriptor) -> List:
+        """(page, num_pages, out) parts of one READ descriptor,
+        allocating result buffers for payload-less requests — shared by
+        the client-side and merged donor-side move paths."""
+        for req in desc.requests:
+            if req.payload is None:
+                req.payload = np.empty((req.num_pages, PAGE_SIZE),
+                                       dtype=np.uint8)
+        return [(req.remote_addr, req.num_pages, req.payload)
+                for req in desc.requests]
+
     def _move_data(self, desc: TransferDescriptor) -> None:
         """Actually move the bytes: one vectorized region access per
         descriptor (single striped-lock round, one numpy slice copy per
@@ -445,33 +498,32 @@ class SimulatedNIC:
         allocation)."""
         region = self.directory.lookup(desc.dest_node)
         if desc.verb == Verb.WRITE:
-            region.writev([(req.remote_addr, req.payload)
-                           for req in desc.requests
-                           if req.payload is not None])
+            region.writev(self._write_parts(desc))
         else:  # READ
-            for req in desc.requests:
-                if req.payload is None:
-                    req.payload = np.empty((req.num_pages, PAGE_SIZE),
-                                           dtype=np.uint8)
-            region.readv([(req.remote_addr, req.num_pages, req.payload)
-                          for req in desc.requests])
+            region.readv(self._read_parts(desc))
 
     # ---- donor-side service (fabric mode) --------------------------------
     def serve_transfer(self, job: _DonorJob) -> None:
         """Enqueue an inbound transfer for service by this node's NIC.
 
-        Called by the *requesting* client's NIC. Jobs queue per client and
-        are drained by one service thread with deficit-round-robin
-        fairness, so no attached client can starve the others. A closed
-        NIC fails the job immediately (RETRY_EXC_ERR, as if the peer died)
-        instead of leaving the client's future hanging."""
+        Called by the *requesting* client's NIC. Jobs queue per client;
+        a deficit-round-robin dispatcher hands per-client *runs* to
+        ``serve_workers`` lazily started service workers, so no attached
+        client can starve the others and distinct clients are serviced
+        concurrently. A closed NIC fails the job immediately
+        (RETRY_EXC_ERR, as if the peer died) instead of leaving the
+        client's future hanging."""
         with self._serve_cv:
             if self._running:
-                if self._serve_thread is None:
-                    self._serve_thread = threading.Thread(
-                        target=self._serve_loop, daemon=True,
-                        name=f"nic{self.node_id}-serve")
-                    self._serve_thread.start()
+                if not self._serve_threads:
+                    self._serve_threads = [
+                        threading.Thread(
+                            target=self._serve_worker, args=(i,),
+                            daemon=True,
+                            name=f"nic{self.node_id}-serve{i}")
+                        for i in range(self.serve_workers)]
+                    for t in self._serve_threads:
+                        t.start()
                 q = self._serve_queues.get(job.src_node)
                 if q is None:
                     q = collections.deque()
@@ -488,19 +540,10 @@ class SimulatedNIC:
         transport-level outcome of a peer that went away mid-transfer."""
         status = job.status if job.status is not WCStatus.SUCCESS \
             else WCStatus.RETRY_EXC_ERR
-        wc = WorkCompletion(
-            wr_id=job.desc.requests[0].wr_id if job.desc.requests else -1,
-            verb=job.desc.verb,
-            dest_node=job.desc.dest_node,
-            nbytes=job.desc.nbytes,
-            status=status,
-            post_vtime_us=job.post_v,
-            complete_vtime_us=job.fwd_complete_v,
-            post_rtime=job.post_r,
-            complete_rtime=time.perf_counter(),
-            requests=job.desc.requests,
-            ecn_mult=job.fwd_mult,
-        )
+        wc = WorkCompletion.for_descriptor(
+            job.desc, status, post_v=job.post_v,
+            complete_v=job.fwd_complete_v, post_r=job.post_r,
+            ecn_mult=job.fwd_mult)
         client_nic = (self._fabric.nic_or_none(job.src_node)
                       if self._fabric is not None else None)
         stats = client_nic.stats if client_nic is not None else self.stats
@@ -508,116 +551,251 @@ class SimulatedNIC:
         stats.wc_errors.add(1)
         job.cq.post(wc)
 
-    def _serve_loop(self) -> None:
+    def _serve_worker(self, wid: int) -> None:
+        """One service worker: blocks on the dispatcher, services whole
+        per-client runs. Pinned to ONE ingress PU pacer, so a donor's
+        service parallelism is bounded by its modeled PU count (one
+        worker = one PU's worth of ingress capacity). At most one run per
+        client is in flight at a time — a client's jobs are serviced in
+        arrival order, as the single serve thread did; parallelism comes
+        from servicing DISTINCT clients concurrently."""
+        pacer = self._pu_pacers[wid % self.cost.num_pus]
         while True:
             with self._serve_cv:
-                while self._running and \
-                        not any(self._serve_queues.values()):
+                while self._running and not self._dispatchable_locked():
                     self._serve_cv.wait(timeout=0.1)
                 if not self._running:
                     # fail whatever is still queued — never drop silently
+                    # (every worker drains; the queues are cleared under
+                    # the lock, so each job is failed exactly once)
                     leftover = [j for q in self._serve_queues.values()
                                 for j in q]
                     for q in self._serve_queues.values():
                         q.clear()
                 else:
                     leftover = None
-                    job = self._next_job_locked()
+                    run = self._next_run_locked(wid)
             if leftover is not None:
                 for j in leftover:
                     self._fail_job(j)
                 return
-            if job is not None:
-                self._serve_job(job)
+            if run:
+                client = run[0].src_node
+                try:
+                    self._serve_run(pacer, run)
+                finally:
+                    with self._serve_cv:
+                        self._serve_busy.discard(client)
+                        # the client may have more queued jobs that only
+                        # this completion made dispatchable
+                        self._serve_cv.notify_all()
 
-    def _next_job_locked(self) -> Optional[_DonorJob]:
-        """Deficit-round-robin pick across attached clients (lock held).
+    def _dispatchable_locked(self) -> bool:
+        """Worker wake-up predicate (lock held): some non-busy client's
+        head job is affordable within one more quantum top-up, OR clients
+        are banking deficit and NOTHING is being serviced. The second arm
+        keeps a lone jumbo-WQE client progressing (repeated dispatch
+        passes bank its deficit, bounded by need/quantum); while other
+        runs ARE in flight, banking clients wait for run completions
+        instead — idle workers must not spin-feed a jumbo's deficit past
+        its per-rotation DRR byte share."""
+        banking = False
+        for c, q in self._serve_queues.items():
+            if not q or c in self._serve_busy:
+                continue
+            if self._serve_deficit[c] + self.service.quantum_bytes \
+                    >= q[0].desc.nbytes:
+                return True
+            banking = True
+        return banking and not self._serve_busy
 
-        Each visit tops a lagging client's deficit up by one quantum, so
-        per rotation every backlogged client is served ~quantum bytes
-        regardless of how fast it posts or how big its WQEs are. May
-        return None while a jumbo WQE is still accumulating deficit."""
+    def _next_run_locked(self, wid: int) -> List[_DonorJob]:
+        """Deficit-round-robin dispatch across attached clients (lock
+        held): pick the next backlogged client, top its deficit up by one
+        quantum if lagging, and drain up to a deficit's worth of its queue
+        as ONE run (a single job when merging is disabled). May return []
+        while a jumbo WQE is still accumulating deficit. A client whose
+        previous run is still in flight is skipped — its jobs must be
+        serviced in arrival order. Accounting for the run (per client and
+        per worker) happens here, atomically with the dispatch
+        decision."""
+        svc = self.service
         n = len(self._serve_order)
         for _ in range(n):
             client = self._serve_order[self._serve_idx % n]
             q = self._serve_queues[client]
-            if not q:
+            if not q or client in self._serve_busy:
                 self._serve_idx += 1
                 continue
-            need = q[0].desc.nbytes
-            if self._serve_deficit[client] < need:
-                self._serve_deficit[client] += DRR_QUANTUM_BYTES
-            if self._serve_deficit[client] < need:
+            if self._serve_deficit[client] < q[0].desc.nbytes:
+                self._serve_deficit[client] += svc.quantum_bytes
+            if self._serve_deficit[client] < q[0].desc.nbytes:
                 self._serve_idx += 1        # keep banking, try next client
                 continue
-            job = q.popleft()
-            self._serve_deficit[client] -= job.desc.nbytes
-            served = self._served.setdefault(client, [0, 0])
-            served[0] += 1
-            served[1] += job.desc.nbytes
+            run = [q.popleft()]
+            self._serve_deficit[client] -= run[0].desc.nbytes
+            if svc.merge:
+                while q and self._serve_deficit[client] >= q[0].desc.nbytes:
+                    job = q.popleft()
+                    self._serve_deficit[client] -= job.desc.nbytes
+                    run.append(job)
+            # rotate away only when this client's deficit is spent (or its
+            # queue drained) — with merge=False a client still holding
+            # affordable deficit keeps the pointer, so per-job runs retain
+            # the same per-rotation BYTE share as merged runs
             if not q:
                 self._serve_deficit[client] = 0    # idle flows bank nothing
                 self._serve_idx += 1
             elif self._serve_deficit[client] < q[0].desc.nbytes:
                 self._serve_idx += 1
-            return job
-        return None
+            nbytes = sum(j.desc.nbytes for j in run)
+            served = self._served.setdefault(client, [0, 0])
+            served[0] += len(run)
+            served[1] += nbytes
+            by_worker = self._served_by_worker[wid]
+            by_worker[0] += len(run)
+            by_worker[1] += nbytes
+            self._serve_rounds += 1
+            if len(run) > 1:
+                self._merged_runs += 1
+                self._merged_jobs += len(run)
+            self._serve_busy.add(client)
+            return run
+        return []
 
-    def _serve_job(self, job: _DonorJob) -> None:
-        """Service one inbound transfer: ingress PU + region bandwidth,
-        the actual byte movement, then a WRITE-with-imm-style ack through
-        this node's egress wire and the reverse link."""
+    def _serve_run(self, pacer: Pacer, jobs: List[_DonorJob]) -> None:
+        """Service one per-client run: ONE batched ingress PU charge and
+        one region-bandwidth charge for the whole vector, a single
+        ``writev``/``readv`` region round, then a coalesced
+        WRITE-with-imm-style ack through this node's egress wire and the
+        reverse link (one transmit + one batched CQ delivery per round
+        instead of per job)."""
         cost = self.cost
-        desc = job.desc
+        client = jobs[0].src_node
         faults = self._fabric.faults
-        mult = faults.serve_multiplier(self.node_id, job.src_node)
-        # ingress processing + donor-region bandwidth: these pacers are
-        # shared across every attached client — the contention point
-        self._serve_pu = (self._serve_pu + 1) % cost.num_pus
-        self._pu_pacers[self._serve_pu].charge(cost.wqe_proc_us * mult)
-        self._wire.charge(desc.num_pages * cost.wire_us_per_page * mult)
-        self.stats.served_wqes.add(1)
-        status = job.status
-        if status is WCStatus.SUCCESS:
-            try:
-                self._move_data(desc)
-            except Exception:
-                status = WCStatus.REMOTE_ERR
+        mult = faults.serve_multiplier(self.node_id, client)
+        total_pages = sum(j.desc.num_pages for j in jobs)
+        # ingress processing lands on THIS worker's pacer; donor-region
+        # bandwidth stays on the shared wire — the honest contention point
+        pacer.charge(cost.wqe_proc_us * len(jobs) * mult)
+        self._wire.charge(total_pages * cost.wire_us_per_page * mult)
+        self.stats.served_wqes.add(len(jobs))
+        statuses = self._move_run(jobs)
         # ack leg: donor egress + reverse link back to the client
-        link = self._fabric.link(self.node_id, job.src_node)
-        ack_v, ack_delay = link.transmit(
-            self._wire, cost.completion_dma_us, 0, ACK_BYTES,
-            fault_mult=mult)
-        self.stats.acks_sent.add(1)
-        self.stats.bytes_on_wire.add(ACK_BYTES)
-        wc = WorkCompletion(
-            wr_id=desc.requests[0].wr_id if desc.requests else -1,
-            verb=desc.verb,
-            dest_node=desc.dest_node,
-            nbytes=desc.nbytes,
-            status=status,
-            post_vtime_us=job.post_v,
-            complete_vtime_us=max(ack_v, job.fwd_complete_v),
-            post_rtime=job.post_r,
-            complete_rtime=time.perf_counter(),
-            requests=desc.requests,
-            # mark with the worst leg: forward (client egress + link) or
-            # donor service/ack — either being degraded is path congestion
-            ecn_mult=max(job.fwd_mult, mult),
-        )
-        # completion accounting stays with the *client's* NIC — it is the
-        # one whose CQ receives the CQE
-        client_nic = self._fabric.nic_or_none(job.src_node)
-        stats = client_nic.stats if client_nic is not None else self.stats
-        stats.completions.add(1)
-        if status is not WCStatus.SUCCESS:
-            stats.wc_errors.add(1)
-        total_delay = job.fwd_delay_real + ack_delay
-        if total_delay > 0.0:
-            self._fabric.delay.post_at(time.perf_counter() + total_delay,
-                                       job.cq, wc)
+        link = self._fabric.link(self.node_id, client)
+        if self.service.coalesce_acks or len(jobs) == 1:
+            ack_v, ack_delay = link.transmit(
+                self._wire, cost.completion_dma_us, 0, ACK_BYTES,
+                fault_mult=mult)
+            self.stats.acks_sent.add(1)
+            self.stats.bytes_on_wire.add(ACK_BYTES)
+            if len(jobs) > 1:
+                self._coalesced_acks.add(1)
+                self._coalesced_jobs.add(len(jobs))
+            acks = [(ack_v, ack_delay)] * len(jobs)
         else:
-            job.cq.post(wc)
+            acks = [link.transmit(self._wire, cost.completion_dma_us, 0,
+                                  ACK_BYTES, fault_mult=mult)
+                    for _ in jobs]
+            self.stats.acks_sent.add(len(jobs))
+            self.stats.bytes_on_wire.add(ACK_BYTES * len(jobs))
+        # completion accounting stays with the *client's* NIC — it is the
+        # one whose CQ receives the CQEs
+        client_nic = self._fabric.nic_or_none(client)
+        stats = client_nic.stats if client_nic is not None else self.stats
+        errors = 0
+        deliveries: List[Tuple[object, WorkCompletion, float]] = []
+        for job, status, (ack_v, ack_delay) in zip(jobs, statuses, acks):
+            wc = WorkCompletion.for_descriptor(
+                job.desc, status, post_v=job.post_v,
+                complete_v=max(ack_v, job.fwd_complete_v),
+                post_r=job.post_r,
+                # mark with the worst leg: forward (client egress + link)
+                # or donor service/ack — either degraded is congestion
+                ecn_mult=max(job.fwd_mult, mult))
+            if status is not WCStatus.SUCCESS:
+                errors += 1
+            deliveries.append((job.cq, wc, job.fwd_delay_real + ack_delay))
+        stats.completions.add(len(jobs))
+        if errors:
+            stats.wc_errors.add(errors)
+        if self.service.coalesce_acks:
+            # batched CQ delivery: one post per touched CQ; a shared ack
+            # naturally lands the whole group at the slowest job's delay
+            by_cq: Dict[object, List] = {}
+            for cq, wc, delay in deliveries:
+                by_cq.setdefault(cq, []).append((wc, delay))
+            for cq, group in by_cq.items():
+                wcs = [wc for wc, _ in group]
+                delay = max(d for _, d in group)
+                if delay > 0.0:
+                    self._fabric.delay.post_many_at(
+                        time.perf_counter() + delay, cq, wcs)
+                else:
+                    cq.post_many(wcs)
+        else:
+            # per-job acks ⇒ per-job delivery at each job's own delay
+            for cq, wc, delay in deliveries:
+                if delay > 0.0:
+                    self._fabric.delay.post_at(
+                        time.perf_counter() + delay, cq, wc)
+                else:
+                    cq.post(wc)
+
+    def _move_run(self, jobs: List[_DonorJob]) -> List[WCStatus]:
+        """Move a whole run's bytes in one vectorized region round (one
+        ``writev`` + one ``readv`` at most — a single striped-lock
+        acquisition per verb). Per-page error isolation: if the merged
+        round fails (e.g. one job targets pages outside the region), fall
+        back to per-job moves so one bad page fails only its own job, not
+        its run-mates."""
+        statuses = [j.status for j in jobs]
+        live = [i for i, s in enumerate(statuses) if s is WCStatus.SUCCESS]
+        if not live:
+            return statuses             # fault-injected whole run: no moves
+        if len(live) == 1:
+            i = live[0]
+            try:
+                self._move_data(jobs[i].desc)
+            except Exception:           # remote access fault → error WC,
+                statuses[i] = WCStatus.REMOTE_ERR   # never a dead worker
+            return statuses
+        # vector rounds are issued in QUEUE order, segmented at verb
+        # boundaries, so a READ queued before a WRITE of the same pages
+        # still observes the pre-write bytes (a homogeneous burst — the
+        # common case — stays one writev or one readv)
+        segments: List[Tuple[Verb, List, List[int]]] = []
+        for i in live:
+            desc = jobs[i].desc
+            if not segments or segments[-1][0] != desc.verb:
+                segments.append((desc.verb, [], []))
+            segments[-1][1].extend(
+                self._write_parts(desc) if desc.verb == Verb.WRITE
+                else self._read_parts(desc))
+            segments[-1][2].append(i)
+        try:
+            region = self.directory.lookup(jobs[live[0]].desc.dest_node)
+        except Exception:               # no such region: every job fails
+            for i in live:
+                statuses[i] = WCStatus.REMOTE_ERR
+            return statuses
+        for verb, parts, idxs in segments:
+            try:
+                if verb == Verb.WRITE:
+                    region.writev(parts)
+                else:
+                    region.readv(parts)
+            except Exception:
+                # one bad page must not fail its run-mates: per-job
+                # fallback for THIS segment only, still in queue order —
+                # segments already applied are never re-executed, so a
+                # read ordered before a later write can't observe it
+                for i in idxs:
+                    try:
+                        self._move_data(jobs[i].desc)
+                    except Exception:
+                        statuses[i] = WCStatus.REMOTE_ERR
+        return statuses
 
     def fairness_snapshot(self) -> Dict[int, Dict[str, int]]:
         """Per-client donor-side service accounting (empty for NICs that
@@ -625,3 +803,27 @@ class SimulatedNIC:
         with self._serve_cv:
             return {c: {"ops": v[0], "bytes": v[1]}
                     for c, v in self._served.items()}
+
+    def service_snapshot(self) -> Dict[str, object]:
+        """Service-plane accounting: per-worker served WQEs/bytes, DRR
+        rounds, and the two receive-side batching counters (merged runs,
+        coalesced acks). Lives under ``nic.<node>.service.*`` in the
+        session stats tree."""
+        with self._serve_cv:
+            workers = {str(i): {"served_wqes": w[0], "served_bytes": w[1]}
+                       for i, w in enumerate(self._served_by_worker)}
+            clients = {c: {"ops": v[0], "bytes": v[1]}
+                       for c, v in self._served.items()}
+            rounds = self._serve_rounds
+            merged_runs = self._merged_runs
+            merged_jobs = self._merged_jobs
+        return {
+            "serve_workers": self.serve_workers,
+            "workers": workers,
+            "clients": clients,
+            "rounds": rounds,
+            "merged_runs": merged_runs,
+            "merged_jobs": merged_jobs,
+            "coalesced_acks": self._coalesced_acks.value,
+            "coalesced_jobs": self._coalesced_jobs.value,
+        }

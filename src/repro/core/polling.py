@@ -175,6 +175,9 @@ class Poller:
                 self._handle(wcs)
             else:
                 s.empty_polls.add()
+            # flush once per wakeup (like the busy/adaptive loops), so
+            # live cpu_seconds snapshots see event-mode CPU before stop()
+            self._flush_cpu(0, every=1)
 
     def _event_batch_loop(self, cq: CompletionQueue) -> None:
         s = self.stats
@@ -190,6 +193,7 @@ class Poller:
                 self._handle(wcs)
             else:
                 s.empty_polls.add()
+            self._flush_cpu(0, every=1)     # flush once per wakeup
 
     def _hybrid_loop(self, cq: CompletionQueue) -> None:
         s = self.stats

@@ -2,11 +2,12 @@
 an explicit link model, with first-class fault injection (donor crash,
 stragglers, transient WC errors, congestion)."""
 
+from ..core.nic import ServiceConfig
 from .fabric import Fabric
 from .faults import FaultEvent, FaultKind, FaultPlan, FaultState
 from .link import DelayLine, Link, LinkConfig
 
 __all__ = [
     "Fabric", "FaultEvent", "FaultKind", "FaultPlan", "FaultState",
-    "DelayLine", "Link", "LinkConfig",
+    "DelayLine", "Link", "LinkConfig", "ServiceConfig",
 ]

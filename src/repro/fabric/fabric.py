@@ -28,7 +28,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
-from ..core.nic import NICCostModel, SimulatedNIC
+from ..core.nic import NICCostModel, ServiceConfig, SimulatedNIC
 from ..core.region import RegionDirectory, RemoteRegion
 from .faults import FaultPlan, FaultState
 from .link import DelayLine, Link, LinkConfig
@@ -44,12 +44,16 @@ class Fabric:
         link: Optional[LinkConfig] = None,
         faults: Optional[FaultPlan] = None,
         seed: int = 0,
+        service: Optional[ServiceConfig] = None,
     ) -> None:
         self.directory = directory or RegionDirectory()
         self.cost = cost or NICCostModel()
         self.scale = scale
         self.kernel_space = kernel_space
         self.link_cfg = link or LinkConfig()
+        # donor-side service-plane policy shared by every NIC in the
+        # fabric (DRR quantum, worker count, merging/ack-coalescing)
+        self.service = service or ServiceConfig()
         self.seed = seed
         self.origin = time.perf_counter()
         self.delay = DelayLine()
@@ -78,6 +82,7 @@ class Fabric:
                     kernel_space=(self.kernel_space if kernel_space is None
                                   else kernel_space),
                     fabric=self, origin=self.origin,
+                    service=self.service,
                 )
                 self._nics[node_id] = nic
         if donor_pages > 0 and node_id not in self.directory:
@@ -155,9 +160,14 @@ class Fabric:
         return {"links": links, "service": service,
                 "faults": self.faults.snapshot()}
 
-    def nic_snapshots(self) -> Dict[int, Dict[str, int]]:
+    def nic_snapshots(self) -> Dict[int, Dict[str, object]]:
+        """Per-NIC counters plus the service-plane sub-node — the session
+        tree's ``nic.<node>.*`` namespace (``nic.<node>.service.*`` holds
+        per-worker served WQEs/bytes and merge/ack-coalescing counters)."""
         with self._lock:
-            return {n: nic.stats.snapshot() for n, nic in self._nics.items()}
+            return {n: {**nic.stats.snapshot(),
+                        "service": nic.service_snapshot()}
+                    for n, nic in self._nics.items()}
 
     def stats(self) -> Dict[str, object]:
         """Legacy flat shape (``nics`` folded in)."""

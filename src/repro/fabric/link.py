@@ -120,7 +120,8 @@ class DelayLine:
     """
 
     def __init__(self) -> None:
-        self._heap: List[Tuple[float, int, WorkCompletion, CompletionQueue]] = []
+        self._heap: List[
+            Tuple[float, int, List[WorkCompletion], CompletionQueue]] = []
         self._cv = threading.Condition()
         self._seq = itertools.count()
         self._thread: Optional[threading.Thread] = None
@@ -128,12 +129,19 @@ class DelayLine:
 
     def post_at(self, when_real: float, cq: CompletionQueue,
                 wc: WorkCompletion) -> None:
+        self.post_many_at(when_real, cq, [wc])
+
+    def post_many_at(self, when_real: float, cq: CompletionQueue,
+                     wcs: List[WorkCompletion]) -> None:
+        """Deliver a whole coalesced-ack batch to one CQ at ``when_real``
+        (one heap entry, one batched ``cq.post_many`` on expiry)."""
         with self._cv:
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._loop, daemon=True, name="fabric-delayline")
                 self._thread.start()
-            heapq.heappush(self._heap, (when_real, next(self._seq), wc, cq))
+            heapq.heappush(self._heap,
+                           (when_real, next(self._seq), list(wcs), cq))
             self._cv.notify()
 
     def _loop(self) -> None:
@@ -145,14 +153,16 @@ class DelayLine:
                     if not self._running:
                         return
                     continue
-                when, _, wc, cq = self._heap[0]
+                when, _, wcs, cq = self._heap[0]
                 now = time.perf_counter()
                 if when > now and self._running:   # close() flushes pending
                     self._cv.wait(timeout=min(when - now, 0.05))
                     continue
                 heapq.heappop(self._heap)
-            wc.complete_rtime = time.perf_counter()
-            cq.post(wc)
+            now = time.perf_counter()
+            for wc in wcs:
+                wc.complete_rtime = now
+            cq.post_many(wcs)
 
     def close(self) -> None:
         with self._cv:

@@ -1,0 +1,457 @@
+"""Parallel donor service plane: per-PU service workers fed by a DRR
+dispatcher, donor-side job merging, and coalesced acks.
+
+Covers the ISSUE-5 satellite matrix: the ``serve_workers`` knob
+round-trips through the spec, DRR fairness holds with parallel workers,
+close() during parallel service FAILS queued jobs (never drops them),
+and merged serve vectors keep per-page error isolation.
+"""
+
+import collections
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import box
+from repro.core import PAGE_SIZE, BoxConfig, RDMABox, ServiceConfig
+from repro.core.completion import CompletionQueue
+from repro.core.descriptors import (
+    TransferDescriptor,
+    Verb,
+    WCStatus,
+    WorkRequest,
+)
+from repro.core.nic import _DonorJob
+from repro.fabric import Fabric
+
+FAST = BoxConfig(nic_scale=2e-8)
+
+
+def page(seed):
+    return np.random.default_rng(seed).integers(
+        0, 255, PAGE_SIZE).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# spec / policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_serve_workers_roundtrips_through_spec():
+    spec = box.ClusterSpec(serve_workers=2,
+                           service={"name": "drr",
+                                    "params": {"quantum_bytes": 8 * PAGE_SIZE,
+                                               "coalesce_acks": False}})
+    again = box.ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.serve_workers == 2
+    assert again.service.params["quantum_bytes"] == 8 * PAGE_SIZE
+    assert box.ClusterSpec().serve_workers is None   # default: one per PU
+
+
+def test_serve_workers_validation():
+    with pytest.raises(ValueError, match="serve_workers"):
+        box.ClusterSpec(serve_workers=0).validate()
+
+
+def test_spec_knob_reaches_the_nics():
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, serve_workers=3)
+    with box.open(spec) as s:
+        donor_nic = s.fabric.nic(s.donors[0])
+        assert donor_nic.serve_workers == 3
+        assert s.fabric.service.merge and s.fabric.service.coalesce_acks
+    # None sizes the pool to the cost model's PU count
+    assert ServiceConfig().num_workers(4) == 4
+    assert ServiceConfig(workers=1).num_workers(4) == 1
+
+
+def test_serve_workers_override_rejects_non_drr_policy():
+    """A custom (non-ServiceConfig) service policy with serve_workers set
+    must fail loudly, not silently ignore the knob."""
+    from repro.box.policies import register_policy
+
+    class NotAServiceConfig:
+        def num_workers(self, num_pus):
+            return 1
+
+    register_policy("service", "custom-svc-for-test")(NotAServiceConfig)
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, serve_workers=8,
+                           service="custom-svc-for-test")
+    with pytest.raises(ValueError, match="serve_workers=8 only applies"):
+        box.open(spec)
+
+
+# ---------------------------------------------------------------------------
+# parallel service: workers actually spread, data stays intact
+# ---------------------------------------------------------------------------
+
+def test_parallel_workers_spread_service_and_preserve_data():
+    spec = box.ClusterSpec(num_donors=1, donor_pages=4096, replication=1,
+                           num_clients=2, nic_scale=2e-8, serve_workers=4)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        datas = {}
+        futs = []
+        for i in range(2):
+            eng = s.engine(i)
+            base = 2048 * i
+            for j in range(48):
+                d = page(100 * i + j)
+                datas[(i, base + 2 * j)] = d
+                futs.append(eng.write(donor, base + 2 * j, d))
+        for f in futs:
+            f.wait(10)
+        for (i, addr), d in datas.items():
+            out = np.zeros(PAGE_SIZE, np.uint8)
+            s.engine(i).read(donor, addr, 1, out=out).wait(10)
+            assert np.array_equal(out, d), (i, addr)
+        svc = s.stats()["nic"][str(donor)]["service"]
+        # reads + writes all served, accounted per worker AND per client
+        total = sum(w["served_wqes"] for w in svc["workers"].values())
+        assert total == 192
+        assert sum(c["ops"] for c in svc["clients"].values()) == 192
+        assert sum(1 for w in svc["workers"].values()
+                   if w["served_wqes"]) >= 2, svc["workers"]
+
+
+def test_drr_skew_bound_holds_with_parallel_workers():
+    """Two clients running identical workloads against ONE shared donor
+    finish within 2x of each other with serve_workers > 1 — the DRR
+    dispatcher keeps fairness even though service itself is parallel."""
+    n = 32
+    spec = box.ClusterSpec(num_donors=1, donor_pages=1 << 13,
+                           replication=1, num_clients=2,
+                           nic_scale=5e-7, serve_workers=4)
+    with box.open(spec) as s:
+        walls = {}
+
+        def work(idx):
+            pager = s.pager(idx)
+            datas = {pid: page(1000 * idx + pid) for pid in range(n)}
+            t0 = time.perf_counter()
+            for pid, d in datas.items():
+                pager.swap_out(pid, d, wait=True)
+            for pid, d in datas.items():
+                assert np.array_equal(pager.swap_in(pid), d), (idx, pid)
+            walls[idx] = time.perf_counter() - t0
+
+        ts = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        skew = max(walls.values()) / min(walls.values())
+        assert skew < 2.0, f"throughput skew {skew:.2f}x: {walls}"
+        service = s.fabric.nic(s.donors[0]).fairness_snapshot()
+        assert set(service) == {0, 1}
+        assert service[0]["bytes"] == service[1]["bytes"]
+
+
+# ---------------------------------------------------------------------------
+# merging + ack coalescing (deterministic, via the dispatcher itself)
+# ---------------------------------------------------------------------------
+
+def _preload_jobs(donor_nic, descs, cq, src=0):
+    """Queue donor jobs directly (the workers have not started yet), so
+    the first dispatch sees the whole backlog as one DRR run."""
+    jobs = [_DonorJob(desc=d, cq=cq, src_node=src, status=WCStatus.SUCCESS,
+                      post_v=0.0, post_r=time.perf_counter(),
+                      fwd_complete_v=0.0, fwd_delay_real=0.0)
+            for d in descs]
+    with donor_nic._serve_cv:
+        q = donor_nic._serve_queues.setdefault(src, collections.deque())
+        if src not in donor_nic._serve_deficit:
+            donor_nic._serve_order.append(src)
+            donor_nic._serve_deficit[src] = 0
+        q.extend(jobs[:-1])
+    donor_nic.serve_transfer(jobs[-1])      # starts workers, notifies
+    return jobs
+
+
+def _write_desc(dest, addr, data):
+    req = WorkRequest(verb=Verb.WRITE, dest_node=dest, remote_addr=addr,
+                      payload=data)
+    return TransferDescriptor(verb=Verb.WRITE, dest_node=dest,
+                              remote_addr=addr, num_pages=1, requests=[req])
+
+
+def test_merged_run_coalesces_acks_and_isolates_page_errors():
+    """A backlogged client's queue drains as ONE merged run with ONE
+    coalesced ack; a job targeting pages outside the region fails alone
+    (REMOTE_ERR) while its run-mates' bytes land intact."""
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)                     # client node (ack routing)
+        cq = CompletionQueue(cq_id=999)
+        datas = {0: page(1), 2: page(2), 4: page(3), 6: page(4)}
+        descs = [_write_desc(1, addr, d) for addr, d in datas.items()]
+        descs.insert(2, _write_desc(1, 4096, page(9)))   # out of range
+        _preload_jobs(donor, descs, cq)
+        wcs = []
+        deadline = time.perf_counter() + 5
+        while len(wcs) < 5 and time.perf_counter() < deadline:
+            wcs.extend(cq.poll(16))
+            time.sleep(0.001)
+        assert len(wcs) == 5, f"only {len(wcs)} completions arrived"
+        by_status = collections.Counter(wc.status for wc in wcs)
+        assert by_status[WCStatus.SUCCESS] == 4
+        assert by_status[WCStatus.REMOTE_ERR] == 1
+        bad = next(wc for wc in wcs if wc.status is WCStatus.REMOTE_ERR)
+        assert bad.requests[0].remote_addr == 4096
+        region = fab.directory.lookup(1)
+        for addr, d in datas.items():       # run-mates landed intact
+            assert np.array_equal(region.read(addr, 1).ravel(), d), addr
+        svc = donor.service_snapshot()
+        assert svc["merged_runs"] == 1 and svc["merged_jobs"] == 5
+        assert svc["coalesced_acks"] == 1 and svc["coalesced_jobs"] == 5
+        assert donor.stats.acks_sent.value == 1      # ONE ack on the wire
+        assert fab.link(1, 0).ctrl_transfers.value == 1
+
+
+def _read_desc(dest, addr, num_pages=1):
+    req = WorkRequest(verb=Verb.READ, dest_node=dest, remote_addr=addr,
+                      num_pages=num_pages)
+    return TransferDescriptor(verb=Verb.READ, dest_node=dest,
+                              remote_addr=addr, num_pages=num_pages,
+                              requests=[req])
+
+
+def test_merge_disabled_keeps_byte_fair_drr():
+    """With merging off, per-job runs must still grant each client a
+    deficit's worth of BYTES per rotation — the pointer stays on a client
+    with unspent deficit instead of degrading to job-fair round-robin
+    (which would hand a 16-page-WQE client 16x the bytes)."""
+    from repro.core.nic import ServiceConfig as SC
+    with Fabric(scale=2e-8, service=SC(merge=False)) as fab:
+        donor = fab.add_node(1, donor_pages=256)
+        cq = CompletionQueue(cq_id=993)
+
+        def mk(src, addr, num_pages):
+            data = np.zeros(num_pages * PAGE_SIZE, np.uint8)
+            req = WorkRequest(verb=Verb.WRITE, dest_node=1,
+                              remote_addr=addr, num_pages=num_pages,
+                              payload=data)
+            desc = TransferDescriptor(verb=Verb.WRITE, dest_node=1,
+                                      remote_addr=addr,
+                                      num_pages=num_pages, requests=[req])
+            return _DonorJob(desc=desc, cq=cq, src_node=src,
+                             status=WCStatus.SUCCESS, post_v=0.0,
+                             post_r=0.0, fwd_complete_v=0.0,
+                             fwd_delay_real=0.0)
+
+        with donor._serve_cv:       # drive the dispatcher directly
+            for src in (0, 2):
+                donor._serve_queues[src] = collections.deque()
+                donor._serve_order.append(src)
+                donor._serve_deficit[src] = 0
+            for j in range(16):     # client 0: 16 single-page jobs
+                donor._serve_queues[0].append(mk(0, j, 1))
+            for j in range(4):      # client 2: 4 sixteen-page jobs
+                donor._serve_queues[2].append(mk(2, 64 + 16 * j, 16))
+        order = []
+        while True:
+            with donor._serve_cv:
+                run = donor._next_run_locked(0)
+                if run:
+                    donor._serve_busy.discard(run[0].src_node)
+            if not run:
+                break
+            order.append(run[0].src_node)
+        # one full 16-job (= one quantum) burst of client 0 per rotation,
+        # not 1 job alternating with 16x-bigger jobs
+        assert order == [0] * 16 + [2] * 4, order
+
+
+def test_merged_run_fallback_never_reexecutes_applied_segments():
+    """[READ p, WRITE p, WRITE bad] in one run: the bad job must not make
+    the fallback re-run the READ after the WRITE already landed — the
+    read was ordered first and must surface the pre-write bytes."""
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        region = fab.directory.lookup(1)
+        old, new = page(50), page(51)
+        region.write(5, old)
+        cq = CompletionQueue(cq_id=992)
+        descs = [_read_desc(1, 5), _write_desc(1, 5, new),
+                 _write_desc(1, 4096, page(52))]      # out of range
+        _preload_jobs(donor, descs, cq)
+        wcs = []
+        deadline = time.perf_counter() + 5
+        while len(wcs) < 3 and time.perf_counter() < deadline:
+            wcs.extend(cq.poll(8))
+            time.sleep(0.001)
+        assert len(wcs) == 3
+        rd = next(wc for wc in wcs if wc.verb is Verb.READ)
+        assert rd.status is WCStatus.SUCCESS
+        assert np.array_equal(rd.requests[0].payload.ravel(), old), \
+            "read ordered before the write observed post-write bytes"
+        assert np.array_equal(region.read(5, 1).ravel(), new)
+        statuses = collections.Counter(wc.status for wc in wcs)
+        assert statuses[WCStatus.REMOTE_ERR] == 1
+
+
+def test_same_client_jobs_service_in_arrival_order():
+    """At most one run per client is in flight: back-to-back writes of
+    the SAME page from one client land in arrival order even with 4
+    workers idle — parallel workers must not reorder a client's jobs."""
+    with Fabric(scale=2e-8,
+                service=ServiceConfig(merge=False)) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        cq = CompletionQueue(cq_id=995)
+        versions = [page(40 + v) for v in range(8)]
+        # merge=False: each write is its own run; the in-flight guard must
+        # still serialize them because they belong to one client
+        descs = [_write_desc(1, 0, v) for v in versions]
+        _preload_jobs(donor, descs, cq)
+        deadline = time.perf_counter() + 5
+        while cq.posted.value < len(versions) and \
+                time.perf_counter() < deadline:
+            time.sleep(0.001)
+        assert cq.posted.value == len(versions)
+        region = fab.directory.lookup(1)
+        assert np.array_equal(region.read(0, 1).ravel(), versions[-1]), \
+            "same-page writes from one client were reordered"
+
+
+def test_jumbo_wqe_banks_deficit_and_gets_served():
+    """A descriptor bigger than the DRR quantum banks deficit across
+    dispatch passes and is eventually served — with no competing traffic
+    the banking must progress without waiting on other runs."""
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(1, donor_pages=256)
+        bx = RDMABox(0, fabric=fab, config=FAST)
+        try:
+            data = np.concatenate([page(70 + i) for i in range(32)])
+            bx.write(1, 0, data, num_pages=32).wait(10)   # 128KiB > 64KiB
+            out = np.zeros(32 * PAGE_SIZE, np.uint8)
+            bx.read(1, 0, 32, out=out).wait(10)
+            assert np.array_equal(out, data)
+        finally:
+            bx.close()
+
+
+def test_coalescing_can_be_disabled_by_policy():
+    with Fabric(scale=2e-8,
+                service=ServiceConfig(coalesce_acks=False)) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        cq = CompletionQueue(cq_id=998)
+        descs = [_write_desc(1, 2 * i, page(i)) for i in range(6)]
+        _preload_jobs(donor, descs, cq)
+        deadline = time.perf_counter() + 5
+        while cq.posted.value < 6 and time.perf_counter() < deadline:
+            time.sleep(0.001)
+        assert cq.posted.value == 6
+        svc = donor.service_snapshot()
+        assert svc["merged_runs"] == 1          # merging still on ...
+        assert svc["coalesced_acks"] == 0       # ... coalescing off
+        assert donor.stats.acks_sent.value == 6  # per-job acks
+
+
+# ---------------------------------------------------------------------------
+# close() during parallel service
+# ---------------------------------------------------------------------------
+
+def test_close_during_parallel_service_fails_not_drops():
+    """Closing a donor NIC mid-service fails every queued job with an
+    error completion — no client future is left hanging."""
+    with Fabric(scale=2e-8) as fab:
+        fab.add_node(1, donor_pages=256)
+        bx = RDMABox(0, fabric=fab, config=FAST)
+        region = fab.directory.lookup(1)
+        donor = fab.nic(1)
+        closer = None
+        try:
+            # hold every region stripe: service workers block mid-run, so
+            # a backlog builds behind them
+            for lk in region._locks:
+                lk.acquire()
+            futs = [bx.write(1, 2 * i, page(i)) for i in range(32)]
+            deadline = time.perf_counter() + 5
+            while time.perf_counter() < deadline and \
+                    not any(donor._serve_queues.values()):
+                time.sleep(0.002)
+            assert any(donor._serve_queues.values()), "no backlog built"
+            closer = threading.Thread(target=donor.close)
+            closer.start()
+            time.sleep(0.1)
+        finally:
+            for lk in region._locks:
+                lk.release()
+        closer.join(20)
+        statuses = []
+        for f in futs:                      # every future resolves — the
+            err = f.exception(timeout=10)   # criterion is fail, not drop
+            statuses.append(err.status if err is not None
+                            else WCStatus.SUCCESS)
+        assert WCStatus.RETRY_EXC_ERR in statuses, statuses
+        bx.close()
+
+
+def test_close_with_workers_never_started_still_fails_queued_jobs():
+    """Jobs that reach a NIC whose service workers never spawned (or
+    died) are failed by close() itself — the last-resort drain."""
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        cq = CompletionQueue(cq_id=997)
+        desc = _write_desc(1, 0, page(5))
+        job = _DonorJob(desc=desc, cq=cq, src_node=0,
+                        status=WCStatus.SUCCESS, post_v=0.0,
+                        post_r=time.perf_counter(), fwd_complete_v=0.0,
+                        fwd_delay_real=0.0)
+        with donor._serve_cv:               # queue without starting workers
+            donor._serve_queues.setdefault(0, collections.deque()).append(job)
+            donor._serve_order.append(0)
+            donor._serve_deficit[0] = 0
+        donor.close()
+        wcs = cq.poll(4)
+        assert len(wcs) == 1
+        assert wcs[0].status is WCStatus.RETRY_EXC_ERR
+
+
+def test_closed_nic_fails_handoff_immediately():
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        donor.close()
+        cq = CompletionQueue(cq_id=996)
+        desc = _write_desc(1, 0, page(6))
+        donor.serve_transfer(_DonorJob(
+            desc=desc, cq=cq, src_node=0, status=WCStatus.SUCCESS,
+            post_v=0.0, post_r=time.perf_counter(), fwd_complete_v=0.0,
+            fwd_delay_real=0.0))
+        wcs = cq.poll(4)
+        assert len(wcs) == 1 and wcs[0].status is WCStatus.RETRY_EXC_ERR
+
+
+# ---------------------------------------------------------------------------
+# stats tree exposure
+# ---------------------------------------------------------------------------
+
+def test_service_namespace_in_session_stats_tree():
+    spec = box.ClusterSpec(num_donors=2, donor_pages=512, replication=1,
+                           nic_scale=2e-8, serve_workers=2)
+    with box.open(spec) as s:
+        eng = s.engine()
+        futs = [eng.write(s.donors[0], 2 * i, page(i)) for i in range(12)]
+        for f in futs:
+            f.wait(10)
+        donor = s.donors[0]
+        svc = s.stats()["nic"][str(donor)]["service"]
+        assert svc["serve_workers"] == 2
+        assert set(svc["workers"]) == {"0", "1"}
+        for key in ("rounds", "merged_runs", "merged_jobs",
+                    "coalesced_acks", "coalesced_jobs"):
+            assert isinstance(svc[key], int), key
+        assert sum(w["served_wqes"] for w in svc["workers"].values()) == 12
+        assert svc["clients"][0]["ops"] == 12
+        flat = s.stats(flat=True)
+        assert f"nic.{donor}.service.serve_workers" in flat
+        assert any(k.startswith(f"nic.{donor}.service.workers.")
+                   for k in flat)
