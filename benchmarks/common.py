@@ -137,3 +137,40 @@ def run_workload(engine: RDMABox, *, threads: int = 4,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.3f},{derived}"
+
+
+# ---- zipfian page traffic ---------------------------------------------------
+# Page-access popularity in paging/KV workloads is heavy-tailed; the
+# donor-cache benchmark (and its unit tests) need a deterministic skewed
+# generator rather than numpy's unbounded ``zipf`` distribution.
+
+def zipfian_weights(num_pages: int, s: float = 1.1) -> np.ndarray:
+    """Normalized zipf(s) probabilities over ranks 0..num_pages-1
+    (rank 0 hottest)."""
+    if num_pages < 1:
+        raise ValueError("num_pages must be >= 1")
+    w = np.arange(1, num_pages + 1, dtype=np.float64) ** -s
+    return w / w.sum()
+
+
+def zipfian_pages(num_pages: int, ops: int, *, s: float = 1.1,
+                  seed: int = 0, hot_shuffle: bool = True) -> np.ndarray:
+    """``ops`` page ids drawn zipf(s)-skewed over ``num_pages`` pages,
+    deterministic in ``seed``. With ``hot_shuffle`` the hot ranks are
+    scattered across the page range by a seeded permutation (hot pages
+    should not be spatially contiguous — contiguity would let run
+    merging hide the skew)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.choice(num_pages, size=ops, p=zipfian_weights(num_pages, s))
+    if not hot_shuffle:
+        return ranks
+    perm = np.random.default_rng((seed, 0xC0FFEE)).permutation(num_pages)
+    return perm[ranks]
+
+
+def zipfian_working_set(num_pages: int, s: float = 1.1,
+                        coverage: float = 0.9) -> int:
+    """Smallest number of (hottest) pages carrying ``coverage`` of the
+    zipf(s) traffic — the benchmark's cache-sizing yardstick."""
+    cum = np.cumsum(zipfian_weights(num_pages, s))
+    return int(np.searchsorted(cum, coverage) + 1)

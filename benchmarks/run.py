@@ -6,8 +6,9 @@ Prints ``name,us_per_call,derived`` CSV. Run:
 
 ``--quick`` sets ``RDMABOX_BENCH_QUICK=1`` before importing modules;
 benchmarks that honor it (bench_faults, bench_multiclient,
-bench_donor_scaling) shrink their workloads for CI smoke runs. ``--json`` additionally writes the rows as
-a JSON document (the artifact CI uploads per PR for the perf trajectory).
+bench_donor_scaling, bench_hotcache) shrink their workloads for CI smoke
+runs. ``--json`` additionally writes the rows as a JSON document (the
+artifact CI uploads per PR for the perf trajectory).
 """
 
 from __future__ import annotations
@@ -30,6 +31,7 @@ MODULES = [
     "benchmarks.bench_faults",           # degraded-mode: crash/straggler/disk
     "benchmarks.bench_multiclient",      # shared donors: fairness + congestion
     "benchmarks.bench_donor_scaling",    # donor service plane: workers scaling
+    "benchmarks.bench_hotcache",         # donor hot-page cache under zipf skew
     "benchmarks.bench_serving",          # Fig. 14
     "benchmarks.bench_paged_attention",  # TPU kernel embodiment
 ]

@@ -18,6 +18,12 @@ config change, not rewiring:
   ``ServiceConfig``): DRR quantum, worker count, donor-side job merging
   and ack coalescing. Built-in: ``drr``. ``ClusterSpec.serve_workers``
   overrides the worker count without replacing the policy.
+* ``cache``      — the donor-side hot-page cache tier (returns a
+  ``CacheConfig``, whose ``build(region)`` makes the per-region
+  ``CacheTier``): capacity, promote-after-N-accesses threshold, CLOCK
+  eviction. Built-in: ``freq-clock`` (capacity 0 = disabled).
+  ``ClusterSpec.donor_cache_pages`` overrides the capacity without
+  replacing the policy.
 
 Third-party policies register via the decorator::
 
@@ -38,9 +44,11 @@ from ..core.batching import BatchPolicy
 from ..core.nic import ServiceConfig
 from ..core.paging import StripedPlacement
 from ..core.polling import PollConfig, PollMode
+from ..core.region import CacheConfig
 from .spec import PolicySpec
 
-POLICY_KINDS = ("admission", "polling", "batching", "placement", "service")
+POLICY_KINDS = ("admission", "polling", "batching", "placement", "service",
+                "cache")
 
 _REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {
     kind: {} for kind in POLICY_KINDS
@@ -118,3 +126,7 @@ register_policy("placement", "striped")(StripedPlacement)
 
 # ---- built-in service-plane policies ---------------------------------------
 register_policy("service", "drr")(ServiceConfig)
+
+
+# ---- built-in donor-cache policies ------------------------------------------
+register_policy("cache", "freq-clock")(CacheConfig)

@@ -32,6 +32,7 @@ from ..core.admission import AdmissionHook
 from ..core.descriptors import PAGE_SIZE, RegMode
 from ..core.errors import ClosedError
 from ..core.nic import NICCostModel, ServiceConfig
+from ..core.region import CacheConfig
 from ..core.paging import DiskTier, RemotePagingSystem
 from ..core.rdmabox import BoxConfig, RDMABox
 from ..fabric import Fabric, FaultPlan, LinkConfig
@@ -112,6 +113,21 @@ class Session:
                     f"{type(service).__name__} — set its worker count via "
                     f"the policy's own params instead")
             service = replace(service, workers=spec.serve_workers)
+        # donor-side hot-page cache: the ``cache`` policy supplies the
+        # CacheConfig (promotion threshold, CLOCK eviction); the
+        # ``donor_cache_pages`` engine knob overrides its capacity
+        cache = create_policy("cache", spec.cache)
+        if spec.donor_cache_pages is not None:
+            if not isinstance(cache, CacheConfig):
+                # a silent no-op would leave the tier sized by the custom
+                # policy while the spec (and stats readers) expect N
+                raise ValueError(
+                    f"donor_cache_pages={spec.donor_cache_pages} only "
+                    f"applies to CacheConfig-based cache policies; the "
+                    f"{spec.cache.name!r} policy is a "
+                    f"{type(cache).__name__} — set its capacity via the "
+                    f"policy's own params instead")
+            cache = replace(cache, capacity_pages=spec.donor_cache_pages)
         self.fabric = Fabric(
             cost=cfg.nic_cost, scale=cfg.nic_scale,
             kernel_space=cfg.kernel_space,
@@ -120,7 +136,8 @@ class Session:
             faults=fault_plan if fault_plan is not None
             else spec.fault_plan(),
             seed=spec.seed,
-            service=service)
+            service=service,
+            cache=cache)
         self.directory = self.fabric.directory
         self.clients: List[int] = [spec.client_node + i
                                    for i in range(spec.num_clients)]

@@ -145,6 +145,10 @@ class ClusterSpec:
     # finer service-plane knobs (DRR quantum, merging, ack coalescing)
     # live on the ``service`` policy below
     serve_workers: Optional[int] = None
+    # donor-side hot-page cache capacity (None → the ``cache`` policy's
+    # own capacity, which defaults to 0 = disabled); finer knobs
+    # (promotion threshold) live on the ``cache`` policy below
+    donor_cache_pages: Optional[int] = None
     # link model ({"latency_us": .., "gbps": .., "jitter_us": ..})
     link: Optional[Dict[str, Any]] = None
     # fault script (list of event dicts, see fault_plan_from_dicts)
@@ -161,9 +165,11 @@ class ClusterSpec:
         default_factory=lambda: PolicySpec("striped"))
     service: PolicySpec = field(
         default_factory=lambda: PolicySpec("drr"))
+    cache: PolicySpec = field(
+        default_factory=lambda: PolicySpec("freq-clock"))
 
     _POLICY_FIELDS = ("admission", "polling", "batching", "placement",
-                      "service")
+                      "service", "cache")
 
     def __post_init__(self) -> None:
         for name in self._POLICY_FIELDS:
@@ -180,6 +186,13 @@ class ClusterSpec:
         if self.serve_workers is not None and self.serve_workers < 1:
             raise ValueError("serve_workers must be >= 1 (or None for "
                              "one worker per modeled PU)")
+        if self.donor_cache_pages is not None and not (
+                0 <= self.donor_cache_pages < self.donor_pages):
+            raise ValueError(
+                f"donor_cache_pages={self.donor_cache_pages} must be >= 0 "
+                f"and below the donor region ({self.donor_pages} pages) — "
+                f"the fast tier mirrors a small hot subset, it cannot "
+                f"replace the region")
         share = self.donor_pages // self.num_clients
         if not 0 <= self.heap_pages <= share:
             raise ValueError(

@@ -32,7 +32,7 @@ from .rdmabox import (
     TransferError,
     TransferFuture,
 )
-from .region import RegionDirectory, RemoteRegion
+from .region import CacheConfig, CacheTier, RegionDirectory, RemoteRegion
 
 __all__ = [
     "AdmissionController", "AdmissionHook", "CongestionAwareHook",
@@ -46,4 +46,5 @@ __all__ = [
     "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
     "BatchFuture", "BatchTransferError",
     "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",
+    "CacheConfig", "CacheTier",
 ]

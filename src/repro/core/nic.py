@@ -45,7 +45,7 @@ from .descriptors import (
     WCStatus,
     WorkCompletion,
 )
-from .region import RegionDirectory
+from .region import CacheTier, RegionDirectory, RemoteRegion
 
 # donor-side service constants: a WRITE-with-imm-style ack is one small
 # message on the wire; the DRR quantum is how many bytes one client may be
@@ -93,6 +93,11 @@ class NICCostModel:
     reg_kernel_us: float = 0.12          # dynMR, kernel space (physical addr)
     wqe_cache_entries: int = 128
     num_pus: int = 4
+    # donor-side hot-page cache tier (RDCA-style last mile): a served WQE
+    # whose pages ALL hit the tier pays this reduced PU charge instead of
+    # wqe_proc_us, and its pages pay NO region-bandwidth (wire) charge —
+    # the bytes never leave the SmartNIC/LLC-resident mirror
+    cache_hit_proc_us: float = 0.05
 
     def reg_cost_us(self, num_pages: int, kernel_space: bool) -> float:
         if kernel_space:
@@ -491,16 +496,47 @@ class SimulatedNIC:
         return [(req.remote_addr, req.num_pages, req.payload)
                 for req in desc.requests]
 
-    def _move_data(self, desc: TransferDescriptor) -> None:
+    def _move_data(self, desc: TransferDescriptor) -> Tuple[int, int]:
         """Actually move the bytes: one vectorized region access per
         descriptor (single striped-lock round, one numpy slice copy per
         request straight into/out of the caller's buffer — no intermediate
-        allocation)."""
+        allocation). Returns (cache-hit pages, miss pages) — writes and
+        reads on an uncached region are all misses."""
         region = self.directory.lookup(desc.dest_node)
         if desc.verb == Verb.WRITE:
             region.writev(self._write_parts(desc))
-        else:  # READ
-            region.readv(self._read_parts(desc))
+            return 0, desc.num_pages
+        parts = self._read_parts(desc)
+        hits = sum(self._readv_tiered(region, parts))
+        return hits, desc.num_pages - hits
+
+    def _readv_tiered(self, region: RemoteRegion, parts: List) -> List[int]:
+        """Gather-read parts through the region's hot-page tier when one
+        is attached: fully-resident parts copy out of the mirror (no
+        region access), the rest gather from the region in ONE vectorized
+        round. Promotion of pages that just crossed the frequency
+        threshold happens after the reads (the tier copies them under
+        their stripe locks). Returns hit page counts parallel to
+        ``parts`` (all zero when no tier is attached)."""
+        tier = region.cache
+        if tier is None:
+            region.readv(parts)
+            return [0] * len(parts)
+        flags, promote = tier.begin_reads(parts)
+        miss = [p for p, f in zip(parts, flags) if not f]
+        if miss:
+            region.readv(miss)
+        hits = [0] * len(parts)
+        for k, ((page, n, out), flag) in enumerate(zip(parts, flags)):
+            if not flag:
+                continue
+            if tier.read_into(page, n, out):
+                hits[k] = n
+            else:       # evicted between classify and serve: same bytes,
+                region.readv([(page, n, out)])      # region-served
+        for page in promote:
+            tier.promote(page)
+        return hits
 
     # ---- donor-side service (fabric mode) --------------------------------
     def serve_transfer(self, job: _DonorJob) -> None:
@@ -669,18 +705,28 @@ class SimulatedNIC:
         ``writev``/``readv`` region round, then a coalesced
         WRITE-with-imm-style ack through this node's egress wire and the
         reverse link (one transmit + one batched CQ delivery per round
-        instead of per job)."""
+        instead of per job). Jobs served wholly from the hot-page cache
+        tier charge the reduced hit-path cost — per segment, so a merged
+        run may mix hits and misses: each fully-hit WQE pays
+        ``cache_hit_proc_us`` instead of ``wqe_proc_us``, and only miss
+        pages consume region bandwidth."""
         cost = self.cost
         client = jobs[0].src_node
         faults = self._fabric.faults
         mult = faults.serve_multiplier(self.node_id, client)
-        total_pages = sum(j.desc.num_pages for j in jobs)
-        # ingress processing lands on THIS worker's pacer; donor-region
-        # bandwidth stays on the shared wire — the honest contention point
-        pacer.charge(cost.wqe_proc_us * len(jobs) * mult)
-        self._wire.charge(total_pages * cost.wire_us_per_page * mult)
         self.stats.served_wqes.add(len(jobs))
-        statuses = self._move_run(jobs)
+        statuses, hit_pages, miss_pages = self._move_run(jobs)
+        # ingress processing lands on THIS worker's pacer; donor-region
+        # bandwidth stays on the shared wire — the honest contention point.
+        # With no tier every job is a miss, reproducing the uncached
+        # charges exactly (wqe_proc_us per WQE + wire time per page).
+        hit_wqes = sum(1 for h, m in zip(hit_pages, miss_pages)
+                       if h and not m)
+        pacer.charge((cost.wqe_proc_us * (len(jobs) - hit_wqes)
+                      + cost.cache_hit_proc_us * hit_wqes) * mult)
+        wire_pages = sum(miss_pages)
+        if wire_pages:
+            self._wire.charge(wire_pages * cost.wire_us_per_page * mult)
         # ack leg: donor egress + reverse link back to the client
         link = self._fabric.link(self.node_id, client)
         if self.service.coalesce_acks or len(jobs) == 1:
@@ -742,60 +788,73 @@ class SimulatedNIC:
                 else:
                     cq.post(wc)
 
-    def _move_run(self, jobs: List[_DonorJob]) -> List[WCStatus]:
+    def _move_run(self, jobs: List[_DonorJob]
+                  ) -> Tuple[List[WCStatus], List[int], List[int]]:
         """Move a whole run's bytes in one vectorized region round (one
         ``writev`` + one ``readv`` at most — a single striped-lock
         acquisition per verb). Per-page error isolation: if the merged
         round fails (e.g. one job targets pages outside the region), fall
         back to per-job moves so one bad page fails only its own job, not
-        its run-mates."""
+        its run-mates. Returns (statuses, per-job cache-hit pages,
+        per-job miss pages) — un-moved (fault-injected or failed) jobs
+        count as all-miss, preserving the uncached charge for them."""
         statuses = [j.status for j in jobs]
+        hit_pages = [0] * len(jobs)
+        miss_pages = [j.desc.num_pages for j in jobs]
         live = [i for i, s in enumerate(statuses) if s is WCStatus.SUCCESS]
         if not live:
-            return statuses             # fault-injected whole run: no moves
+            return statuses, hit_pages, miss_pages   # fault-injected run
         if len(live) == 1:
             i = live[0]
             try:
-                self._move_data(jobs[i].desc)
+                hit_pages[i], miss_pages[i] = self._move_data(jobs[i].desc)
             except Exception:           # remote access fault → error WC,
                 statuses[i] = WCStatus.REMOTE_ERR   # never a dead worker
-            return statuses
+            return statuses, hit_pages, miss_pages
         # vector rounds are issued in QUEUE order, segmented at verb
         # boundaries, so a READ queued before a WRITE of the same pages
         # still observes the pre-write bytes (a homogeneous burst — the
-        # common case — stays one writev or one readv)
-        segments: List[Tuple[Verb, List, List[int]]] = []
+        # common case — stays one writev or one readv). ``owners`` maps
+        # each part back to its job, so a merged run's cache hits are
+        # attributed per WQE (a run may mix hit and miss jobs).
+        segments: List[Tuple[Verb, List, List[int], List[int]]] = []
         for i in live:
             desc = jobs[i].desc
             if not segments or segments[-1][0] != desc.verb:
-                segments.append((desc.verb, [], []))
-            segments[-1][1].extend(
-                self._write_parts(desc) if desc.verb == Verb.WRITE
-                else self._read_parts(desc))
-            segments[-1][2].append(i)
+                segments.append((desc.verb, [], [], []))
+            parts = (self._write_parts(desc) if desc.verb == Verb.WRITE
+                     else self._read_parts(desc))
+            segments[-1][1].extend(parts)
+            segments[-1][2].extend([i] * len(parts))
+            segments[-1][3].append(i)
         try:
             region = self.directory.lookup(jobs[live[0]].desc.dest_node)
         except Exception:               # no such region: every job fails
             for i in live:
                 statuses[i] = WCStatus.REMOTE_ERR
-            return statuses
-        for verb, parts, idxs in segments:
+            return statuses, hit_pages, miss_pages
+        for verb, parts, owners, idxs in segments:
             try:
                 if verb == Verb.WRITE:
                     region.writev(parts)
                 else:
-                    region.readv(parts)
+                    for owner, h in zip(owners,
+                                        self._readv_tiered(region, parts)):
+                        if h:
+                            hit_pages[owner] += h
+                            miss_pages[owner] -= h
             except Exception:
                 # one bad page must not fail its run-mates: per-job
                 # fallback for THIS segment only, still in queue order —
                 # segments already applied are never re-executed, so a
                 # read ordered before a later write can't observe it
                 for i in idxs:
+                    hit_pages[i], miss_pages[i] = 0, jobs[i].desc.num_pages
                     try:
                         self._move_data(jobs[i].desc)
                     except Exception:
                         statuses[i] = WCStatus.REMOTE_ERR
-        return statuses
+        return statuses, hit_pages, miss_pages
 
     def fairness_snapshot(self) -> Dict[int, Dict[str, int]]:
         """Per-client donor-side service accounting (empty for NICs that
@@ -806,9 +865,14 @@ class SimulatedNIC:
 
     def service_snapshot(self) -> Dict[str, object]:
         """Service-plane accounting: per-worker served WQEs/bytes, DRR
-        rounds, and the two receive-side batching counters (merged runs,
-        coalesced acks). Lives under ``nic.<node>.service.*`` in the
-        session stats tree."""
+        rounds, the two receive-side batching counters (merged runs,
+        coalesced acks), and the hot-page cache tier's counters under
+        ``cache`` (zeroed shape when no tier is attached). Lives under
+        ``nic.<node>.service.*`` in the session stats tree."""
+        region = self.directory.get(self.node_id)
+        tier = region.cache if region is not None else None
+        cache = (tier.snapshot() if tier is not None
+                 else CacheTier.disabled_snapshot())
         with self._serve_cv:
             workers = {str(i): {"served_wqes": w[0], "served_bytes": w[1]}
                        for i, w in enumerate(self._served_by_worker)}
@@ -826,4 +890,5 @@ class SimulatedNIC:
             "merged_jobs": merged_jobs,
             "coalesced_acks": self._coalesced_acks.value,
             "coalesced_jobs": self._coalesced_jobs.value,
+            "cache": cache,
         }

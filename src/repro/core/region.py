@@ -10,12 +10,24 @@ letting transfers to disjoint parts of a donor region proceed in parallel
 instead of serializing on one whole-region lock. The vectorized entry
 points (``writev``/``readv``) take the union of their parts' stripes once,
 so a merged multi-run descriptor pays a single lock round trip.
+
+Hot-page cache tier (RDCA-style last mile): a donor region may carry a
+bounded ``CacheTier`` mirroring its hottest pages — the model of
+SmartNIC/LLC-resident data the receive side can serve without touching
+host memory. The tier is *consulted* by the serving NIC (reads hit the
+mirror at a reduced service cost) but *kept coherent* here, at the one
+choke point every write path shares: ``write``/``writev`` invoke the
+tier's write hook while still holding the written pages' stripe locks,
+so a cached page is written through (the mirror can never go stale) and
+an uncached write invalidates any pending promotion credit. Lock order
+is always region stripes → tier lock, never the reverse.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Dict, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,6 +45,10 @@ class RemoteRegion:
         stripes = max(1, min(lock_stripes, num_pages))
         self._stripe_pages = -(-num_pages // stripes)       # ceil
         self._locks = [threading.Lock() for _ in range(stripes)]
+        # optional hot-page fast tier (attached by the fabric when the
+        # cluster enables donor caching); every write path below notifies
+        # it under the stripe locks, so it can never serve stale bytes
+        self.cache: Optional["CacheTier"] = None
 
     # ---- striped locking -------------------------------------------------
     def _stripes_of(self, page: int, num_pages: int) -> range:
@@ -60,6 +76,8 @@ class RemoteRegion:
         self._acquire(stripes)
         try:
             self._mem[page : page + n] = data.reshape(n, PAGE_SIZE)
+            if self.cache is not None:
+                self.cache.on_write([(page, data, n)])
         finally:
             self._release(stripes)
 
@@ -97,6 +115,8 @@ class RemoteRegion:
         try:
             for page, data, n in sizes:
                 self._mem[page : page + n] = data.reshape(n, PAGE_SIZE)
+            if self.cache is not None:
+                self.cache.on_write(sizes)
         finally:
             self._release(ordered)
 
@@ -123,6 +143,212 @@ class RemoteRegion:
         return self.num_pages * PAGE_SIZE
 
 
+class CacheTier:
+    """Bounded mirror of a donor region's hottest pages.
+
+    Models the RDCA "last mile": a small SmartNIC/LLC-resident tier the
+    receive side serves hits from without paying host-memory (region)
+    bandwidth. Promotion is frequency-based — an uncached page earns one
+    credit per read access and is promoted once it accumulates
+    ``promote_after`` — and eviction is CLOCK (second chance): frames
+    carry a reference bit, set on every hit, that buys one sweep of grace
+    before the hand reclaims the frame.
+
+    Coherence contract (the part that lets the tier serve *bytes*, not
+    just a cost discount):
+
+    * ``on_write`` is called by the owning region's write paths while
+      they still hold the written pages' stripe locks. A cached page is
+      written through — the mirror is updated in place and stays hot; an
+      uncached page loses its pending promotion credit (the accesses that
+      earned it saw bytes that no longer exist) and counts an
+      invalidation.
+    * ``promote`` copies the page under its region stripe lock, so a
+      concurrent write can never leave a torn or stale frame.
+    * Read hits (``read_into``) copy out of the mirror, so a coherence
+      bug surfaces as wrong bytes in tests, not as a silent cost error.
+
+    Lock order is region stripes → tier lock everywhere; the tier never
+    acquires a stripe while holding its own lock (``begin_reads`` returns
+    the pages to promote instead of promoting them inline).
+    """
+
+    def __init__(self, region: RemoteRegion, capacity_pages: int,
+                 promote_after: int = 2) -> None:
+        self.region = region
+        self.capacity = max(1, min(capacity_pages, region.num_pages))
+        self.promote_after = max(1, promote_after)
+        self._frames = np.zeros((self.capacity, PAGE_SIZE), dtype=np.uint8)
+        self._frame_of: Dict[int, int] = {}      # page -> frame
+        self._page_of: List[Optional[int]] = [None] * self.capacity
+        self._ref: List[bool] = [False] * self.capacity
+        self._free: List[int] = list(range(self.capacity))
+        self._hand = 0
+        self._pending: Dict[int, int] = {}       # page -> access credit
+        self._lock = threading.Lock()
+        self._hits = 0            # counters in PAGES (read-serving only)
+        self._misses = 0
+        self._promotions = 0
+        self._evictions = 0
+        self._invalidations = 0
+        self._write_throughs = 0
+
+    # ---- read path (called by the serving NIC) ---------------------------
+    def begin_reads(self, parts: Sequence[Tuple[int, int, np.ndarray]]
+                    ) -> Tuple[List[bool], List[int]]:
+        """Classify read parts in one lock round: returns (hit flags
+        parallel to ``parts``, pages that just crossed the promotion
+        threshold). A part hits only when EVERY page of its range is
+        resident — partially-resident multi-page reads are served from
+        the region (and counted as misses). Missed pages earn promotion
+        credit; the caller performs the returned promotions *after*
+        releasing any region locks (``promote`` takes stripes itself)."""
+        num_pages = self.region.num_pages
+        flags: List[bool] = []
+        promote: List[int] = []
+        with self._lock:
+            for page, n, _ in parts:
+                if page < 0 or page + n > num_pages:
+                    flags.append(False)     # bound error: the region read
+                    self._misses += n       # will raise, don't track it
+                    continue
+                resident = all(page + k in self._frame_of for k in range(n))
+                flags.append(resident)
+                if resident:
+                    self._hits += n
+                    for k in range(n):
+                        self._ref[self._frame_of[page + k]] = True
+                    continue
+                self._misses += n
+                for k in range(n):
+                    p = page + k
+                    if p in self._frame_of:
+                        continue            # resident page of a mixed range
+                    credit = self._pending.get(p, 0) + 1
+                    if credit >= self.promote_after:
+                        self._pending.pop(p, None)
+                        promote.append(p)
+                    else:
+                        self._pending[p] = credit
+        return flags, promote
+
+    def read_into(self, page: int, n: int, out: np.ndarray) -> bool:
+        """Serve a hit from the mirror. Returns False when any page was
+        evicted between classification and service (the caller falls back
+        to the region — the bytes are identical, only the charge was
+        already taken as a hit)."""
+        with self._lock:
+            try:
+                frames = [self._frame_of[page + k] for k in range(n)]
+            except KeyError:
+                return False
+            out[...] = self._frames[frames].reshape(out.shape)
+            return True
+
+    def promote(self, page: int) -> None:
+        """Install one page, copying under its region stripe lock so a
+        concurrent write cannot tear the frame. Idempotent — a racing
+        promotion of the same page is a no-op."""
+        r = self.region
+        if not 0 <= page < r.num_pages:
+            return
+        stripes = list(r._stripes_of(page, 1))
+        r._acquire(stripes)
+        try:
+            with self._lock:
+                if page in self._frame_of:
+                    return
+                frame = self._victim_locked()
+                self._frames[frame] = r._mem[page]
+                self._frame_of[page] = frame
+                self._page_of[frame] = page
+                self._ref[frame] = True     # one CLOCK sweep of grace
+                self._promotions += 1
+        finally:
+            r._release(stripes)
+
+    def _victim_locked(self) -> int:
+        if self._free:
+            return self._free.pop()
+        while True:
+            f = self._hand
+            self._hand = (self._hand + 1) % self.capacity
+            if self._ref[f]:
+                self._ref[f] = False        # second chance
+                continue
+            old = self._page_of[f]
+            if old is not None:
+                del self._frame_of[old]
+                self._page_of[f] = None
+                self._evictions += 1
+            return f
+
+    # ---- write-path coherence hook ---------------------------------------
+    def on_write(self, sized_parts: Sequence[Tuple[int, np.ndarray, int]]
+                 ) -> None:
+        """Called by the region's write paths WITH the written pages'
+        stripe locks held: write-through for cached pages, promotion-
+        credit invalidation for uncached ones."""
+        with self._lock:
+            for page, data, n in sized_parts:
+                rows = data.reshape(n, PAGE_SIZE)
+                for k in range(n):
+                    frame = self._frame_of.get(page + k)
+                    if frame is not None:
+                        self._frames[frame] = rows[k]
+                        self._write_throughs += 1
+                    elif self._pending.pop(page + k, None) is not None:
+                        self._invalidations += 1
+
+    # ---- stats -----------------------------------------------------------
+    @staticmethod
+    def disabled_snapshot() -> Dict[str, object]:
+        """The zeroed shape a donor without a tier reports, so stats
+        consumers can address ``service.cache.*`` unconditionally."""
+        return {"capacity_pages": 0, "resident_pages": 0, "hits": 0,
+                "misses": 0, "promotions": 0, "evictions": 0,
+                "invalidations": 0, "write_throughs": 0, "hit_rate": 0.0}
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            hits, misses = self._hits, self._misses
+            out = {
+                "capacity_pages": self.capacity,
+                "resident_pages": len(self._frame_of),
+                "hits": hits,
+                "misses": misses,
+                "promotions": self._promotions,
+                "evictions": self._evictions,
+                "invalidations": self._invalidations,
+                "write_throughs": self._write_throughs,
+            }
+        total = hits + misses
+        out["hit_rate"] = hits / total if total else 0.0
+        return out
+
+
+@dataclass
+class CacheConfig:
+    """The ``cache`` policy kind (built-in name: ``freq-clock``).
+
+    ``capacity_pages=0`` (the default) disables the tier entirely —
+    donors serve every page from the region exactly as before.
+    ``ClusterSpec.donor_cache_pages`` overrides the capacity without
+    replacing the policy, mirroring ``serve_workers`` on the service
+    policy. Custom cache policies registered via ``@register_policy``
+    must provide ``build(region) -> Optional[CacheTier-like]``.
+    """
+
+    capacity_pages: int = 0       # 0 disables the tier
+    promote_after: int = 2        # read accesses before promotion
+
+    def build(self, region: RemoteRegion) -> Optional[CacheTier]:
+        if self.capacity_pages <= 0:
+            return None
+        return CacheTier(region, self.capacity_pages,
+                         promote_after=self.promote_after)
+
+
 class RegionDirectory:
     """Cluster-wide directory of donated regions (exchange of rkeys/addrs)."""
 
@@ -134,6 +360,9 @@ class RegionDirectory:
 
     def lookup(self, node_id: int) -> RemoteRegion:
         return self._regions[node_id]
+
+    def get(self, node_id: int) -> Optional[RemoteRegion]:
+        return self._regions.get(node_id)
 
     def __contains__(self, node_id: int) -> bool:
         return node_id in self._regions

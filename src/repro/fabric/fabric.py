@@ -29,7 +29,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from ..core.nic import NICCostModel, ServiceConfig, SimulatedNIC
-from ..core.region import RegionDirectory, RemoteRegion
+from ..core.region import CacheConfig, RegionDirectory, RemoteRegion
 from .faults import FaultPlan, FaultState
 from .link import DelayLine, Link, LinkConfig
 
@@ -45,6 +45,7 @@ class Fabric:
         faults: Optional[FaultPlan] = None,
         seed: int = 0,
         service: Optional[ServiceConfig] = None,
+        cache: Optional[CacheConfig] = None,
     ) -> None:
         self.directory = directory or RegionDirectory()
         self.cost = cost or NICCostModel()
@@ -54,6 +55,10 @@ class Fabric:
         # donor-side service-plane policy shared by every NIC in the
         # fabric (DRR quantum, worker count, merging/ack-coalescing)
         self.service = service or ServiceConfig()
+        # donor-side hot-page cache policy; every donated region gets a
+        # tier built from it (None / capacity 0 = no tier, serve-from-
+        # region exactly as before)
+        self.cache = cache
         self.seed = seed
         self.origin = time.perf_counter()
         self.delay = DelayLine()
@@ -88,7 +93,10 @@ class Fabric:
         if donor_pages > 0 and node_id not in self.directory:
             # never re-register: replacing the region would zero the
             # donor's memory under live swapped-out pages
-            self.directory.register(RemoteRegion(node_id, donor_pages))
+            region = RemoteRegion(node_id, donor_pages)
+            if self.cache is not None:
+                region.cache = self.cache.build(region)
+            self.directory.register(region)
         return nic
 
     def nic(self, node_id: int) -> SimulatedNIC:

@@ -252,6 +252,32 @@ def test_stats_tree_has_all_namespaces_populated():
         assert any(k.startswith("nic.3.") for k in flat)
 
 
+def test_flatten_stats_expands_list_leaves():
+    """List leaves flatten to indexed dotted keys — per-worker and
+    per-link stats are addressable, not opaque blobs."""
+    from repro.box.stats import flatten_stats
+
+    tree = {"service": {"per_worker": [{"served_wqes": 3},
+                                       {"served_wqes": 5}]},
+            "links": [{"bytes": 7}],
+            "empty": [],
+            "tup": (1, 2),
+            "scalar": 42}
+    flat = flatten_stats(tree)
+    assert flat["service.per_worker.0.served_wqes"] == 3
+    assert flat["service.per_worker.1.served_wqes"] == 5
+    assert flat["links.0.bytes"] == 7
+    assert flat["empty"] == []          # empty lists stay leaves
+    assert flat["tup.0"] == 1 and flat["tup.1"] == 2
+    assert flat["scalar"] == 42
+    # a real session's fabric link list expands too
+    with box.open(small_spec()) as session:
+        session.pager().swap_out(0, PAGE, wait=True)
+        flat = session.stats(flat=True)
+        assert any(k.startswith("fabric.links.0.") for k in flat), \
+            [k for k in flat if k.startswith("fabric.links")]
+
+
 # ---- ECN marks (satellite) ------------------------------------------------
 def test_ecn_marks_shrink_window_without_latency_signal():
     """The link's congestion multiplier surfaces as an ECN-style mark on

@@ -1,0 +1,408 @@
+"""Hot-page donor cache tier (RDCA-style last mile).
+
+Covers the ISSUE-6 matrix: the ``donor_cache_pages`` knob round-trips
+through the spec and reaches the region's tier, the ``cache`` policy
+registry rejects the knob on non-CacheConfig policies, promotion/CLOCK
+eviction behave deterministically, and — the part that matters — the
+tier can never serve stale bytes: write-through on cached pages,
+credit invalidation on uncached writes, coherent mixed read/write merged
+runs, and a concurrent hammer with byte-exact readback.
+"""
+
+import collections
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from benchmarks.common import (
+    zipfian_pages,
+    zipfian_weights,
+    zipfian_working_set,
+)
+from repro import box
+from repro.core import PAGE_SIZE, CacheConfig, CacheTier, RemoteRegion
+from repro.core.completion import CompletionQueue
+from repro.core.descriptors import WCStatus
+from repro.fabric import Fabric
+
+# white-box donor-queue helpers shared with the service-plane tests
+# (imported lazily inside the tests that need them: the tests directory
+# is not a package, so the module is only importable once pytest has
+# put it on sys.path)
+
+
+def _service_helpers():
+    from test_donor_service import _preload_jobs, _read_desc, _write_desc
+    return _preload_jobs, _read_desc, _write_desc
+
+
+def page(seed):
+    return np.random.default_rng(seed).integers(
+        0, 255, PAGE_SIZE).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# spec / policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_donor_cache_pages_roundtrips_through_spec():
+    spec = box.ClusterSpec(donor_cache_pages=128,
+                           cache={"name": "freq-clock",
+                                  "params": {"promote_after": 3}})
+    again = box.ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.donor_cache_pages == 128
+    assert again.cache.params["promote_after"] == 3
+    assert box.ClusterSpec().donor_cache_pages is None   # default: policy's
+
+
+def test_donor_cache_pages_validation():
+    box.ClusterSpec(donor_pages=256, donor_cache_pages=0).validate()
+    box.ClusterSpec(donor_pages=256, donor_cache_pages=255).validate()
+    with pytest.raises(ValueError, match="donor_cache_pages"):
+        box.ClusterSpec(donor_pages=256, donor_cache_pages=256).validate()
+    with pytest.raises(ValueError, match="donor_cache_pages"):
+        box.ClusterSpec(donor_pages=256, donor_cache_pages=-1).validate()
+
+
+def test_spec_knob_reaches_the_region():
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, donor_cache_pages=16,
+                           cache={"name": "freq-clock",
+                                  "params": {"promote_after": 1}})
+    with box.open(spec) as s:
+        tier = s.directory.lookup(s.donors[0]).cache
+        assert isinstance(tier, CacheTier)
+        assert tier.capacity == 16 and tier.promote_after == 1
+    # the default spec leaves donors tierless (capacity 0 = disabled)
+    with box.open(box.ClusterSpec(num_donors=1, donor_pages=256,
+                                  replication=1, nic_scale=2e-8)) as s:
+        assert s.directory.lookup(s.donors[0]).cache is None
+
+
+def test_cache_override_rejects_non_cacheconfig_policy():
+    """A custom (non-CacheConfig) cache policy with donor_cache_pages set
+    must fail loudly, not silently ignore the knob."""
+    from repro.box.policies import register_policy
+
+    class NotACacheConfig:
+        def build(self, region):
+            return None
+
+    register_policy("cache", "custom-cache-for-test")(NotACacheConfig)
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, donor_cache_pages=8,
+                           cache="custom-cache-for-test")
+    with pytest.raises(ValueError, match="donor_cache_pages=8 only applies"):
+        box.open(spec)
+
+
+def test_cache_config_build_disabled_and_clamped():
+    region = RemoteRegion(0, 4)
+    assert CacheConfig().build(region) is None
+    assert CacheConfig(capacity_pages=0).build(region) is None
+    tier = CacheConfig(capacity_pages=64).build(region)
+    assert tier.capacity == 4            # clamped to the region
+
+
+# ---------------------------------------------------------------------------
+# promotion / CLOCK eviction (deterministic, unit level)
+# ---------------------------------------------------------------------------
+
+def _read_flags(tier, page_id, n=1):
+    out = np.empty((n, PAGE_SIZE), np.uint8)
+    flags, promote = tier.begin_reads([(page_id, n, out)])
+    for p in promote:
+        tier.promote(p)
+    return flags[0]
+
+
+def test_promotion_threshold_and_hits():
+    region = RemoteRegion(0, 16)
+    datas = {p: page(p) for p in range(4)}
+    for p, d in datas.items():
+        region.write(p, d)
+    tier = CacheTier(region, capacity_pages=4, promote_after=2)
+    assert _read_flags(tier, 0) is False     # miss 1: credit
+    assert _read_flags(tier, 0) is False     # miss 2: promoted after
+    assert _read_flags(tier, 0) is True      # hit, from the mirror
+    out = np.empty(PAGE_SIZE, np.uint8)
+    assert tier.read_into(0, 1, out)
+    assert np.array_equal(out, datas[0])
+    snap = tier.snapshot()
+    assert snap["promotions"] == 1 and snap["resident_pages"] == 1
+    assert snap["hits"] == 1 and snap["misses"] == 2
+    assert snap["hit_rate"] == pytest.approx(1 / 3)
+
+
+def test_clock_eviction_gives_second_chance():
+    region = RemoteRegion(0, 16)
+    for p in range(5):
+        region.write(p, page(p))
+    tier = CacheTier(region, capacity_pages=2, promote_after=1)
+    tier.promote(0)                          # free-list: frame 1
+    tier.promote(1)                          # free-list: frame 0
+    # hand over the REFERENCED frame: CLOCK must clear its bit and pass
+    # over (second chance), reclaiming the unreferenced frame instead
+    frame0 = tier._frame_of[0]
+    tier._ref = [False, False]
+    tier._ref[frame0] = True
+    tier._hand = frame0
+    tier.promote(2)
+    assert set(tier._frame_of) == {0, 2}     # page 1 evicted, 0 spared
+    assert tier.snapshot()["evictions"] == 1
+    # that sweep spent page 0's grace: with no new reference it goes next
+    tier._ref[tier._frame_of[2]] = False     # isolate page 0's fate
+    tier.promote(3)
+    assert 0 not in tier._frame_of
+    assert set(tier._frame_of) == {2, 3}
+
+
+def test_partial_residency_is_a_miss_and_out_of_range_is_untracked():
+    region = RemoteRegion(0, 16)
+    for p in range(4):
+        region.write(p, page(p))
+    tier = CacheTier(region, capacity_pages=4, promote_after=1)
+    tier.promote(0)
+    out = np.empty((2, PAGE_SIZE), np.uint8)
+    flags, promote = tier.begin_reads([(0, 2, out)])
+    assert flags == [False]                  # page 1 not resident
+    assert promote == [1]                    # only the uncached page earns
+    flags, _ = tier.begin_reads([(100, 2, out)])
+    assert flags == [False]                  # out of range: plain miss,
+    assert 100 not in tier._pending          # never tracked or promoted
+    tier.promote(100)                        # bounds-guarded no-op
+    assert 100 not in tier._frame_of
+
+
+def test_read_into_reports_eviction_race():
+    region = RemoteRegion(0, 16)
+    region.write(0, page(0))
+    tier = CacheTier(region, capacity_pages=2, promote_after=1)
+    out = np.empty(PAGE_SIZE, np.uint8)
+    assert tier.read_into(0, 1, out) is False    # never promoted
+
+
+# ---------------------------------------------------------------------------
+# coherence: the tier can never serve stale bytes
+# ---------------------------------------------------------------------------
+
+def test_write_through_updates_the_mirror():
+    region = RemoteRegion(0, 16)
+    old, new = page(1), page(2)
+    region.write(3, old)
+    tier = region.cache = CacheTier(region, capacity_pages=4,
+                                    promote_after=1)
+    tier.promote(3)
+    region.write(3, new)                     # scalar write path
+    out = np.empty(PAGE_SIZE, np.uint8)
+    assert tier.read_into(3, 1, out)
+    assert np.array_equal(out, new)
+    newer = page(3)
+    region.writev([(3, newer)])              # vectorized write path
+    assert tier.read_into(3, 1, out)
+    assert np.array_equal(out, newer)
+    assert tier.snapshot()["write_throughs"] == 2
+
+
+def test_uncached_write_invalidates_pending_credit():
+    region = RemoteRegion(0, 16)
+    region.write(5, page(5))
+    tier = region.cache = CacheTier(region, capacity_pages=4,
+                                    promote_after=2)
+    assert _read_flags(tier, 5) is False     # credit 1 of 2
+    region.write(5, page(6))                 # bytes the credit saw are gone
+    snap = tier.snapshot()
+    assert snap["invalidations"] == 1
+    assert _read_flags(tier, 5) is False     # back to credit 1
+    assert _read_flags(tier, 5) is False     # credit 2: promoted
+    assert _read_flags(tier, 5) is True
+
+
+def test_merged_run_mixing_cached_read_write_read_stays_coherent():
+    """[READ p, WRITE p, READ p] in ONE merged run with p cached: the
+    first read must surface pre-write bytes (it was ordered first), the
+    second post-write bytes — a stale mirror would fail either side."""
+    _preload_jobs, _read_desc, _write_desc = _service_helpers()
+    with Fabric(scale=2e-8,
+                cache=CacheConfig(capacity_pages=8, promote_after=1)) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        region = fab.directory.lookup(1)
+        old, new = page(60), page(61)
+        region.write(5, old)
+        region.cache.promote(5)
+        cq = CompletionQueue(cq_id=991)
+        descs = [_read_desc(1, 5), _write_desc(1, 5, new), _read_desc(1, 5)]
+        _preload_jobs(donor, descs, cq)
+        wcs = []
+        deadline = time.perf_counter() + 5
+        while len(wcs) < 3 and time.perf_counter() < deadline:
+            wcs.extend(cq.poll(8))
+            time.sleep(0.001)
+        assert len(wcs) == 3
+        assert all(wc.status is WCStatus.SUCCESS for wc in wcs)
+        by_req = {id(wc.requests[0]): wc for wc in wcs}
+        first = by_req[id(descs[0].requests[0])].requests[0].payload.ravel()
+        second = by_req[id(descs[2].requests[0])].requests[0].payload.ravel()
+        assert np.array_equal(first, old), \
+            "read ordered before the write observed post-write bytes"
+        assert np.array_equal(second, new), \
+            "read ordered after the write served STALE cached bytes"
+        out = np.empty(PAGE_SIZE, np.uint8)
+        assert region.cache.read_into(5, 1, out)     # mirror written through
+        assert np.array_equal(out, new)
+        snap = region.cache.snapshot()
+        assert snap["write_throughs"] == 1 and snap["hits"] >= 1
+
+
+def test_concurrent_mixed_hammer_reads_back_byte_exact():
+    """Two clients hammer a tiny universe through a too-small tier
+    (constant promotion/eviction churn) with per-batch write ordering;
+    the final readback must be byte-exact for every page."""
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           num_clients=2, nic_scale=2e-8,
+                           donor_cache_pages=8,
+                           cache={"name": "freq-clock",
+                                  "params": {"promote_after": 1}})
+    ops, universe, batch = 96, 24, 16
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        share = spec.donor_pages // 2
+        final = {}
+        lock = threading.Lock()
+
+        def client(i):
+            eng = s.engine(i)
+            base = i * share
+            rng = np.random.default_rng(i)
+            version = {}
+            out = np.empty(PAGE_SIZE, np.uint8)
+            for lo in range(0, ops, batch):
+                futs, wrote = [], set()
+                for _ in range(batch):
+                    p = base + int(rng.integers(universe))
+                    if rng.random() < 0.4 and p not in wrote:
+                        wrote.add(p)
+                        v = version.get(p, 0) + 1
+                        version[p] = v
+                        fill = (i + 37 * p + 101 * v) % 256
+                        futs.append(eng.write(
+                            donor, p, np.full(PAGE_SIZE, fill, np.uint8)))
+                    else:
+                        futs.append(eng.read(donor, p, 1, out=out))
+                for f in futs:
+                    f.wait(30)
+            with lock:
+                final.update({p: (i + 37 * p + 101 * v) % 256
+                              for p, v in version.items()})
+
+        ts = [threading.Thread(target=client, args=(i,)) for i in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        buf = np.empty(PAGE_SIZE, np.uint8)
+        for p, fill in sorted(final.items()):
+            s.engine(0 if p < share else 1).read(
+                donor, p, 1, out=buf).wait(30)
+            assert (buf == fill).all(), f"stale bytes on page {p}"
+        cache = s.stats()["nic"][str(donor)]["service"]["cache"]
+        assert cache["hits"] > 0, cache      # tier actually served traffic
+        assert cache["evictions"] > 0, cache  # ... while churning
+
+
+# ---------------------------------------------------------------------------
+# stats exposure
+# ---------------------------------------------------------------------------
+
+def test_cache_namespace_in_session_stats_tree():
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, donor_cache_pages=8,
+                           cache={"name": "freq-clock",
+                                  "params": {"promote_after": 1}})
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        eng = s.engine()
+        eng.write(donor, 3, page(3)).wait(10)
+        for _ in range(3):
+            out = np.empty(PAGE_SIZE, np.uint8)
+            eng.read(donor, 3, 1, out=out).wait(10)
+        cache = s.stats()["nic"][str(donor)]["service"]["cache"]
+        assert cache["capacity_pages"] == 8
+        assert cache["hits"] >= 2 and cache["promotions"] == 1
+        assert 0.0 < cache["hit_rate"] < 1.0
+        flat = s.stats(flat=True)
+        for leaf in ("hits", "misses", "promotions", "evictions",
+                     "invalidations", "hit_rate"):
+            assert f"nic.{donor}.service.cache.{leaf}" in flat, leaf
+        # a tierless NIC (the client) reports the zeroed shape
+        client = s.clients[0]
+        assert flat[f"nic.{client}.service.cache.capacity_pages"] == 0
+        assert flat[f"nic.{client}.service.cache.hit_rate"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# zipfian generator (benchmarks.common)
+# ---------------------------------------------------------------------------
+
+def test_zipfian_pages_is_deterministic_per_seed():
+    a = zipfian_pages(256, 512, s=1.1, seed=7)
+    b = zipfian_pages(256, 512, s=1.1, seed=7)
+    c = zipfian_pages(256, 512, s=1.1, seed=8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert a.min() >= 0 and a.max() < 256
+
+
+def test_zipfian_top_pages_carry_expected_share():
+    """Top-1% of pages (by empirical frequency) must carry the analytic
+    zipf share of the traffic — the skew the cache exists to exploit."""
+    n, ops, s = 1000, 50_000, 1.1
+    w = zipfian_weights(n, s)
+    assert w.sum() == pytest.approx(1.0)
+    expected = float(w[: n // 100].sum())    # analytic top-1% share
+    trace = zipfian_pages(n, ops, s=s, seed=3)
+    counts = np.bincount(trace, minlength=n)
+    top = np.sort(counts)[::-1][: n // 100].sum() / ops
+    assert top == pytest.approx(expected, abs=0.03)
+    assert top > 0.25                        # heavy-tailed, not uniform
+
+
+def test_zipfian_working_set_tracks_coverage():
+    ws50 = zipfian_working_set(512, s=1.1, coverage=0.5)
+    ws90 = zipfian_working_set(512, s=1.1, coverage=0.9)
+    assert 0 < ws50 < ws90 <= 512
+    w = zipfian_weights(512, 1.1)
+    assert w[:ws90].sum() >= 0.9 > w[: ws90 - 1].sum()
+
+
+def test_merged_runs_still_isolate_errors_with_cache_enabled():
+    """The fallback path (per-job re-execution after a bad run-mate)
+    resets the bad run to all-miss accounting but must keep serving
+    correct bytes from the region."""
+    _preload_jobs, _read_desc, _write_desc = _service_helpers()
+    with Fabric(scale=2e-8,
+                cache=CacheConfig(capacity_pages=8, promote_after=1)) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        region = fab.directory.lookup(1)
+        good = page(80)
+        region.write(7, good)
+        region.cache.promote(7)
+        cq = CompletionQueue(cq_id=990)
+        descs = [_read_desc(1, 7), _write_desc(1, 4096, page(81))]
+        _preload_jobs(donor, descs, cq)
+        wcs = []
+        deadline = time.perf_counter() + 5
+        while len(wcs) < 2 and time.perf_counter() < deadline:
+            wcs.extend(cq.poll(8))
+            time.sleep(0.001)
+        assert len(wcs) == 2
+        statuses = collections.Counter(wc.status for wc in wcs)
+        assert statuses[WCStatus.SUCCESS] == 1
+        assert statuses[WCStatus.REMOTE_ERR] == 1
+        ok = next(wc for wc in wcs if wc.status is WCStatus.SUCCESS)
+        assert np.array_equal(ok.requests[0].payload.ravel(), good)
