@@ -25,7 +25,6 @@ artifact keeps the numbers either way).
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 
@@ -34,11 +33,10 @@ import numpy as np
 from repro import box
 from repro.core import PAGE_SIZE
 
-from .common import csv_row
+from .common import csv_row, sized
 
-QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
 CLIENTS = 4
-PAGES = 192 if QUICK else 320       # jobs per client
+PAGES = sized(320, 192)             # jobs per client
 BATCH = 64                          # pages per write_pages vector
 WORKERS = (1, 2, 4)
 SCALING_BOUND = 2.0                 # served ops/s at 4 workers vs 1

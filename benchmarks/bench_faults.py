@@ -19,7 +19,6 @@ a regression fails the harness, not just skews a number.
 
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
@@ -27,10 +26,9 @@ import numpy as np
 from repro import box
 from repro.core import PAGE_SIZE
 
-from .common import csv_row
+from .common import csv_row, sized
 
-QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
-PAGES = 48 if QUICK else 192
+PAGES = sized(192, 48)
 SCALE = 5e-7
 
 

@@ -21,7 +21,6 @@ see stale cached bytes (write-through / invalidate coherence).
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 
@@ -30,12 +29,11 @@ import numpy as np
 from repro import box
 from repro.core import PAGE_SIZE
 
-from .common import csv_row, zipfian_pages, zipfian_working_set
+from .common import csv_row, quick_mode, sized, zipfian_pages, zipfian_working_set
 
-QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
 CLIENTS = 4
-UNIVERSE = 256 if QUICK else 512    # pages per client universe
-OPS = 512 if QUICK else 1536        # ops per client (mixed phase)
+UNIVERSE = sized(512, 256)          # pages per client universe
+OPS = sized(1536, 512)              # ops per client (mixed phase)
 BATCH = 128                         # in-flight ops per client batch
 SKEW = 1.1
 READ_FRAC = 0.9
@@ -145,7 +143,7 @@ def _run(cache_pages: int) -> dict:
 
 def main() -> list:
     ws = CLIENTS * zipfian_working_set(UNIVERSE, SKEW, coverage=0.9)
-    sizes = [0, ws // 2, ws] if QUICK else \
+    sizes = [0, ws // 2, ws] if quick_mode() else \
         [0, ws // 4, ws // 2, ws, min(DONOR_PAGES - 1, ws * 3 // 2)]
     out = []
     results = {n: _run(n) for n in sizes}

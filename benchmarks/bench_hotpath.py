@@ -28,18 +28,16 @@ overhead ratio, at 1 and 4 client threads.
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 
 from repro.core import PAGE_SIZE
 
-from .common import DATA, csv_row, make_session
+from .common import DATA, csv_row, make_session, sized
 
-QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
 # quick stays big enough that fixed costs don't dominate — the 4-thread
 # speedup margin shrinks (and gets noisy) on tiny workloads
-PAGES_PER_THREAD = 1024 if QUICK else 4096
+PAGES_PER_THREAD = sized(4096, 1024)
 THREAD_COUNTS = (1, 4)
 SCALE = 1e-8          # 1 vus = 10 ns: hardware ~free, host overhead exposed
 MIN_SPEEDUP = 3.0

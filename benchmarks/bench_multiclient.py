@@ -22,7 +22,6 @@ harness, not just skews a number.
 
 from __future__ import annotations
 
-import os
 import threading
 import time
 
@@ -31,10 +30,9 @@ import numpy as np
 from repro import box
 from repro.core import PAGE_SIZE
 
-from .common import csv_row
+from .common import csv_row, sized
 
-QUICK = os.environ.get("RDMABOX_BENCH_QUICK") == "1"
-PAGES = 32 if QUICK else 128
+PAGES = sized(128, 32)
 SCALE = 5e-7
 # documented fairness bound: max/min per-client throughput when clients
 # run identical workloads against one shared donor

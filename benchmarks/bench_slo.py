@@ -1,0 +1,187 @@
+"""Multi-tenant SLO serving: premium p99 under congested zipfian load.
+
+The paper's headline is a cut in *tail* latency; RDMAvisor frames the
+datacenter version of the problem — many tenants share RDMA as a
+service, with differentiated levels. This benchmark runs one premium
+tenant (closed-loop, sparse requests, clean path) against ``NUM_BE``
+best-effort tenants (open-loop zipfian floods over congested paths) into
+ONE donor with a single service worker, and compares two runs:
+
+* ``slo``  — the SLO treatment: ``service="slo"`` (priority/deadline
+  visit order + weighted quanta on the donor dispatcher) plus SLA-driven
+  admission (premium protected at full window until its own p99 breaks
+  the target; best-effort sheds window on fewer ECN marks).
+* ``drr``  — the control: plain DRR, no SLA classes, every client equal.
+
+Self-checks (after yielding rows, so ``run.py --json`` keeps the numbers
+even on a failed bound): premium p99 within its declared target under
+the SLO policy; the control run degrades premium p99 by >= 2x; aggregate
+served throughput within 10% of the control (the SLO policy reorders
+work, it must not destroy it); premium's admission window untouched
+while at least one best-effort window shrank.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro import box
+from repro.core import PAGE_SIZE
+
+from .common import DATA, csv_row, sized, zipfian_pages
+
+NUM_BE = 4                          # best-effort tenants
+CLIENTS = 1 + NUM_BE                # + the premium tenant (client 0)
+UNIVERSE = 256                      # pages per tenant universe
+OPS = sized(256, 96)                # ops per best-effort tenant
+BATCH = 32                          # best-effort in-flight batch
+SKEW = 1.1
+THINK_S = 0.02                      # premium closed-loop think time (real s)
+P99_TARGET_US = 10_000.0            # premium contract, virtual us
+CONGEST = 3.0                       # best-effort path multiplier (ECN-marked)
+DEGRADE_BOUND = 2.0                 # control premium p99 vs SLO premium p99
+THROUGHPUT_BAND = 0.10              # |slo agg ops/s - drr agg ops/s| / drr
+WINDOW_PAGES = 32                   # client admission window (binds)
+QUANTUM_PAGES = 16                  # DRR quantum, both runs
+# PU-heavy cost model (see bench_donor_scaling): donor ingress processing
+# dominates, so dispatch ORDER is what premium latency is made of
+COST = {"wqe_proc_us": 100.0, "wire_us_per_page": 0.02, "mmio_us": 0.05,
+        "dma_read_us": 0.02, "completion_dma_us": 0.02,
+        "reg_kernel_us": 0.05}
+SCALE = 1e-5
+DONOR_PAGES = 1 << 12
+
+
+def _run(slo: bool) -> dict:
+    donor_node = CLIENTS            # clients are nodes 0..CLIENTS-1
+    faults = []
+    for be in range(1, CLIENTS):    # congest BOTH directions of every
+        for src, dst in ((donor_node, be), (be, donor_node)):   # BE path
+            faults.append({"kind": "congest", "src": src, "dst": dst,
+                           "factor": CONGEST})
+    spec = box.ClusterSpec(
+        num_donors=1, donor_pages=DONOR_PAGES, num_clients=CLIENTS,
+        replication=1, nic_scale=SCALE, nic_cost=COST, serve_workers=1,
+        window_bytes=WINDOW_PAGES * PAGE_SIZE,
+        admission="congestion",
+        service={"name": "slo" if slo else "drr",
+                 "params": {"quantum_bytes": QUANTUM_PAGES * PAGE_SIZE}},
+        sla=(["premium"] + ["best_effort"] * NUM_BE) if slo else None,
+        sla_classes=({"premium": {"p99_target_us": P99_TARGET_US}}
+                     if slo else None),
+        faults=faults)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        share = spec.donor_pages // CLIENTS
+        start = threading.Barrier(CLIENTS)
+        be_done = threading.Event()
+        be_left = [NUM_BE]
+        left_lock = threading.Lock()
+        premium_ops = [0]
+
+        def be_client(i: int) -> None:
+            eng = s.engine(i)
+            trace = i * share + zipfian_pages(UNIVERSE, OPS, s=SKEW, seed=i)
+            start.wait()
+            for lo in range(0, OPS, BATCH):
+                futs = [eng.write(donor, int(p), DATA)
+                        for p in trace[lo:lo + BATCH]]
+                for f in futs:
+                    f.wait(240)
+            with left_lock:
+                be_left[0] -= 1
+                if be_left[0] == 0:
+                    be_done.set()
+
+        def premium_client() -> None:
+            eng = s.engine(0)
+            trace = zipfian_pages(UNIVERSE, 4 * OPS, s=SKEW, seed=1000)
+            start.wait()
+            n = 0
+            # closed loop with think time, only while best-effort load is
+            # actually on — every recorded premium latency competes with
+            # the floods
+            while not be_done.is_set():
+                eng.write(donor, int(trace[n % len(trace)]), DATA).wait(240)
+                n += 1
+                time.sleep(THINK_S)
+            premium_ops[0] = n
+
+        threads = [threading.Thread(target=premium_client)] + [
+            threading.Thread(target=be_client, args=(i,))
+            for i in range(1, CLIENTS)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = s.stats()
+        clients = stats["client"]
+        svc = stats["nic"][str(donor)]["service"]
+        fractions = {i: clients[str(i)]["box"]["admission"]["hook"]
+                     ["window_fraction"] for i in range(CLIENTS)}
+        be_p99 = max(clients[str(i)]["box"]["latency"]["p99_us"]
+                     for i in range(1, CLIENTS))
+    total_ops = NUM_BE * OPS + premium_ops[0]
+    return {
+        "mode": "slo" if slo else "drr",
+        "wall": wall,
+        "ops_s": total_ops / wall,
+        "premium_ops": premium_ops[0],
+        "premium_p99": clients["0"]["box"]["latency"]["p99_us"],
+        "premium_p50": clients["0"]["box"]["latency"]["p50_us"],
+        "be_p99": be_p99,
+        "premium_fraction": fractions[0],
+        "min_be_fraction": min(fractions[i] for i in range(1, CLIENTS)),
+        "per_class": svc["per_class"],
+    }
+
+
+def main():
+    results = {m: _run(m == "slo") for m in ("slo", "drr")}
+    for mode, r in results.items():
+        yield csv_row(
+            f"slo/{mode}", r["premium_p99"],
+            f"premium_p50_us={r['premium_p50']:.0f};"
+            f"premium_ops={r['premium_ops']};be_p99_us={r['be_p99']:.0f};"
+            f"agg_ops_s={r['ops_s']:.0f};"
+            f"premium_window={r['premium_fraction']:.3f};"
+            f"min_be_window={r['min_be_fraction']:.3f}")
+    # per-class SLO summary rows (the donor's own per_class histograms);
+    # the control run attributes everything to "default"
+    for mode, r in results.items():
+        for name, d in sorted(r["per_class"].items()):
+            lat = d["latency"]
+            yield csv_row(
+                f"slo/{mode}/class_{name}", lat["p99_us"],
+                f"p50_us={lat['p50_us']:.0f};p999_us={lat['p999_us']:.0f};"
+                f"mean_us={lat['mean_us']:.0f};ops={d['ops']};"
+                f"bytes={d['bytes']}")
+    # self-checks AFTER yielding rows so the JSON keeps the numbers
+    slo, drr = results["slo"], results["drr"]
+    assert slo["premium_p99"] <= P99_TARGET_US, (
+        f"premium p99 {slo['premium_p99']:.0f}us broke its "
+        f"{P99_TARGET_US:.0f}us target under the SLO policy")
+    degrade = drr["premium_p99"] / max(slo["premium_p99"], 1e-9)
+    assert degrade >= DEGRADE_BOUND, (
+        f"control run degraded premium p99 only {degrade:.2f}x "
+        f"({drr['premium_p99']:.0f}us vs {slo['premium_p99']:.0f}us) — "
+        f"the SLO policy is not doing anything")
+    band = abs(slo["ops_s"] - drr["ops_s"]) / drr["ops_s"]
+    assert band <= THROUGHPUT_BAND, (
+        f"SLO policy moved aggregate throughput {band:.1%} "
+        f"({slo['ops_s']:.0f} vs {drr['ops_s']:.0f} ops/s; "
+        f"bound {THROUGHPUT_BAND:.0%})")
+    assert slo["premium_fraction"] == 1.0, (
+        f"premium admission window shrank to "
+        f"{slo['premium_fraction']:.3f} despite protection")
+    assert slo["min_be_fraction"] < 1.0, (
+        "no best-effort window shrank — the congestion episode never "
+        "reached admission")
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -15,10 +15,11 @@ misses, wakeups) are exact.
 
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, TypeVar
 
 import numpy as np
 
@@ -33,6 +34,22 @@ from repro.core import (
 )
 
 DATA = np.arange(PAGE_SIZE, dtype=np.uint8)
+
+_T = TypeVar("_T")
+
+
+def quick_mode() -> bool:
+    """True when the CI smoke harness asked for reduced sizes
+    (``RDMABOX_BENCH_QUICK=1``; ``run.py --quick`` sets it before the
+    bench modules import)."""
+    return os.environ.get("RDMABOX_BENCH_QUICK") == "1"
+
+
+def sized(full: _T, quick: _T) -> _T:
+    """The ONE quick-mode switch for workload sizes: every bench module
+    picks its page/op counts as ``sized(full, quick)`` instead of keeping
+    a private ``QUICK`` conditional."""
+    return quick if quick_mode() else full
 
 
 def polling_ref(poll: PollConfig) -> dict:

@@ -16,9 +16,10 @@ One import gives the whole workflow::
 Layers: a declarative, JSON-round-trippable ``ClusterSpec`` consumed by
 ``open(spec) -> Session``; a ``Session`` facade owning lifecycle and
 handing out typed capabilities (``RemoteHeap``/``RemoteBuffer``,
-``Pager``, ``TensorStore``, ``KVStore``, raw ``engine()``); policy
-registries (``admission``/``polling``/``batching``/``placement``)
-selected by name and extended via ``register_policy``; a typed error
+``Pager``, ``TensorStore``, ``KVStore``, raw ``engine()``); seven policy
+registries (``admission``/``polling``/``batching``/``placement``/
+``service``/``cache``/``sla``) selected by name and extended via
+``register_policy``; a typed error
 hierarchy rooted at ``BoxError``; and a single composed stats tree with
 ``fabric.*`` / ``nic.<node>.*`` / ``client.<i>.box.*`` / ``paging.*``
 namespaces. The old entrypoints (``MemoryCluster`` et al.) survive as
@@ -36,7 +37,7 @@ from ..core.rdmabox import (
 from .handles import KVStore, Pager, RemoteBuffer, RemoteHeap, TensorStore
 from .policies import create_policy, policy_names, register_policy
 from .session import Session, open_session
-from .spec import ClusterSpec, PolicySpec
+from .spec import ClusterSpec, PolicySpec, SLAClass
 from .stats import flatten_stats
 
 # the factory reads naturally as repro.box.open(spec)
@@ -55,6 +56,7 @@ __all__ = [
     "PolicySpec",
     "RemoteBuffer",
     "RemoteHeap",
+    "SLAClass",
     "Session",
     "TensorStore",
     "TransferError",

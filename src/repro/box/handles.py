@@ -142,7 +142,12 @@ class RemoteBuffer(_Capability):
 
     # ---- one-WR paths ------------------------------------------------------
     def write(self, data: np.ndarray, page_offset: int = 0) -> TransferFuture:
-        """Async write of ``data`` at ``page_offset``; one WorkRequest."""
+        """Async write of ``data`` at ``page_offset``; one WorkRequest.
+
+        Raises ``ValueError`` on a payload that is not a non-empty
+        multiple of ``PAGE_SIZE`` and ``AllocError`` when the page range
+        falls outside the buffer; the returned future's ``wait`` raises
+        ``TransferError`` on a failed transfer."""
         self._guard()
         n = self._pages_of(data, "write")
         self._check(page_offset, n, "write")
@@ -151,7 +156,8 @@ class RemoteBuffer(_Capability):
 
     def read_into(self, out: np.ndarray,
                   page_offset: int = 0) -> TransferFuture:
-        """Async read at ``page_offset`` straight into ``out``."""
+        """Async read at ``page_offset`` straight into ``out`` (same
+        payload/range/failure contract as ``write``)."""
         self._guard()
         n = self._pages_of(out, "read")
         self._check(page_offset, n, "read")
@@ -169,7 +175,9 @@ class RemoteBuffer(_Capability):
     # ---- batch-vector paths ------------------------------------------------
     def writev(self, items: Sequence[Tuple[int, np.ndarray]]) -> BatchFuture:
         """One batched write vector of (page_offset, data) pairs — a
-        single merge-queue lock acquisition, ONE future for the vector."""
+        single merge-queue lock acquisition, ONE future for the vector.
+        The future's ``wait`` raises ``BatchTransferError`` naming every
+        failed page; ``errors`` returns the per-page map instead."""
         self._guard()
         pairs = []
         for off, data in items:
@@ -280,7 +288,14 @@ class RemoteHeap(_Capability):
 
 
 class Pager(_Capability):
-    """Capability view of one client's replicated remote paging system."""
+    """Capability view of one client's replicated remote paging system.
+
+    Pages are ``PAGE_SIZE``-byte units addressed by ``page_id`` in
+    ``[0, capacity_pages)``. Writes replicate to ``spec.replication``
+    donors; reads fail over replica → first-responder → disk before an
+    error ever surfaces. All methods raise ``ClosedError`` after the
+    owning session closes.
+    """
 
     def __init__(self, session, paging: RemotePagingSystem) -> None:
         super().__init__(session)
@@ -288,10 +303,16 @@ class Pager(_Capability):
 
     @property
     def capacity_pages(self) -> int:
+        """Addressable pages (placement-dependent, < the region slice)."""
         return self._paging.capacity_pages
 
     def swap_out(self, page_id: int, data: np.ndarray, wait: bool = False,
                  timeout: float = 30.0) -> List[TransferFuture]:
+        """Write one page to every replica.
+
+        Returns one future per replica write (already waited on when
+        ``wait=True``). Raises ``TransferError`` (via ``wait``) when a
+        replica write fails past the engine's RNR retries."""
         self._guard()
         return self._paging.swap_out(page_id, data, wait=wait,
                                      timeout=timeout)
@@ -299,29 +320,42 @@ class Pager(_Capability):
     def swap_out_batch(self, items: List[Tuple[int, np.ndarray]],
                        timeout: float = 30.0,
                        wait: bool = True) -> List[BatchFuture]:
+        """Batched swap-out of (page_id, data) pairs — one coalesced
+        write vector per touched donor, one ``BatchFuture`` each."""
         self._guard()
         return self._paging.swap_out_batch(items, timeout=timeout, wait=wait)
 
     def swap_in(self, page_id: int, timeout: float = 10.0) -> np.ndarray:
+        """Read one page back (fresh buffer), trying replicas in order
+        and falling back to disk only when ALL replicas failed. An
+        in-flight async swap-out of the same page is served locally from
+        the write buffer. Raises ``KeyError`` for a never-written page."""
         self._guard()
         return self._paging.swap_in(page_id, timeout=timeout)
 
     def prefetch(self, page_id: int, out: np.ndarray) -> TransferFuture:
+        """Async read of one page straight into ``out`` (no failover —
+        the caller inspects the future)."""
         self._guard()
         return self._paging.prefetch(page_id, out)
 
     def prefetch_batch(self, items: List[Tuple[int, np.ndarray]]):
+        """Batched prefetch of (page_id, out-buffer) pairs; returns a
+        handle whose ``wait()`` resolves every read."""
         self._guard()
         return self._paging.prefetch_batch(items)
 
     def replicas(self, page_id: int) -> List[Tuple[int, int]]:
+        """The (donor_node, donor_page) placement of every replica."""
         return self._paging.replicas(page_id)
 
     def fail_node(self, node: int) -> None:
+        """Strike a donor: reads skip it, writes stop targeting it."""
         self._guard()
         self._paging.fail_node(node)
 
     def recover_node(self, node: int) -> None:
+        """Clear a strike set by ``fail_node`` (or crash detection)."""
         self._guard()
         self._paging.recover_node(node)
 

@@ -1,6 +1,6 @@
 """Pluggable policy registries for the ``repro.box`` surface.
 
-Four policy kinds cover the engine's decision points; a ``ClusterSpec``
+Seven policy kinds cover the engine's decision points; a ``ClusterSpec``
 selects each by name (plus a parameter dict), so swapping a policy is a
 config change, not rewiring:
 
@@ -16,14 +16,21 @@ config change, not rewiring:
   Built-in: ``striped`` (the paper's layout).
 * ``service``    — the donor-side service plane (returns a
   ``ServiceConfig``): DRR quantum, worker count, donor-side job merging
-  and ack coalescing. Built-in: ``drr``. ``ClusterSpec.serve_workers``
-  overrides the worker count without replacing the policy.
+  and ack coalescing. Built-ins: ``drr``, ``slo`` (weighted +
+  deadline-aware DRR driven by the clients' SLA classes).
+  ``ClusterSpec.serve_workers`` overrides the worker count without
+  replacing the policy.
 * ``cache``      — the donor-side hot-page cache tier (returns a
   ``CacheConfig``, whose ``build(region)`` makes the per-region
   ``CacheTier``): capacity, promote-after-N-accesses threshold, CLOCK
   eviction. Built-in: ``freq-clock`` (capacity 0 = disabled).
   ``ClusterSpec.donor_cache_pages`` overrides the capacity without
   replacing the policy.
+* ``sla``       — named tenant service levels (returns an ``SLAClass``:
+  dispatch weight, backlog priority, optional ``p99_target_us``
+  contract, admission protection). Built-ins: ``premium``,
+  ``standard``, ``best_effort``; ``ClusterSpec.sla_classes`` overrides
+  parameters per spec without registering anything.
 
 Third-party policies register via the decorator::
 
@@ -41,14 +48,14 @@ from typing import Any, Callable, Dict, List, Optional
 
 from ..core.admission import AdmissionHook, CongestionAwareHook
 from ..core.batching import BatchPolicy
-from ..core.nic import ServiceConfig
+from ..core.nic import ServiceConfig, SLOServiceConfig
 from ..core.paging import StripedPlacement
 from ..core.polling import PollConfig, PollMode
 from ..core.region import CacheConfig
-from .spec import PolicySpec
+from .spec import PolicySpec, SLAClass
 
 POLICY_KINDS = ("admission", "polling", "batching", "placement", "service",
-                "cache")
+                "cache", "sla")
 
 _REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {
     kind: {} for kind in POLICY_KINDS
@@ -126,7 +133,28 @@ register_policy("placement", "striped")(StripedPlacement)
 
 # ---- built-in service-plane policies ---------------------------------------
 register_policy("service", "drr")(ServiceConfig)
+register_policy("service", "slo")(SLOServiceConfig)
 
 
 # ---- built-in donor-cache policies ------------------------------------------
 register_policy("cache", "freq-clock")(CacheConfig)
+
+
+# ---- built-in SLA classes ---------------------------------------------------
+def _sla_factory(**defaults: Any) -> Callable[..., SLAClass]:
+    def make(**params: Any) -> SLAClass:
+        return SLAClass(**{**defaults, **params})
+    return make
+
+
+# premium: 4x DRR credit, visited first under backlog, window protected
+# until its own p99 breaks 5k vus; standard: 2x credit; best_effort: the
+# pre-SLO default, plus a hair-trigger ECN response so it sheds window
+# first when the fabric marks.
+register_policy("sla", "premium")(_sla_factory(
+    name="premium", weight=4.0, priority=2, p99_target_us=5000.0,
+    protected=True))
+register_policy("sla", "standard")(_sla_factory(
+    name="standard", weight=2.0, priority=1))
+register_policy("sla", "best_effort")(_sla_factory(
+    name="best_effort", weight=1.0, priority=0, ecn_mark_fraction=0.25))

@@ -28,10 +28,10 @@ from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from ..core.admission import AdmissionHook
+from ..core.admission import AdmissionHook, CongestionAwareHook
 from ..core.descriptors import PAGE_SIZE, RegMode
 from ..core.errors import ClosedError
-from ..core.nic import NICCostModel, ServiceConfig
+from ..core.nic import NICCostModel, ServiceConfig, SLOServiceConfig
 from ..core.region import CacheConfig
 from ..core.paging import DiskTier, RemotePagingSystem
 from ..core.rdmabox import BoxConfig, RDMABox
@@ -102,6 +102,31 @@ class Session:
         # ServiceConfig (DRR quantum, merging, ack coalescing); the
         # ``serve_workers`` engine knob overrides its worker count
         service = create_policy("service", spec.service)
+        # SLA compilation: spec.sla names one class per client; the
+        # compiled SLAClass objects parameterize BOTH halves of the SLO
+        # story — per-client maps on the service policy (donor dispatch
+        # order, weighted quanta, per-class stats attribution) here, and
+        # per-client admission-hook protection below
+        sla = spec.sla_for_clients()
+        if sla is not None:
+            nodes = [spec.client_node + i for i in range(spec.num_clients)]
+            if isinstance(service, SLOServiceConfig):
+                service = replace(
+                    service,
+                    client_class={n: c.name for n, c in zip(nodes, sla)},
+                    client_weight={n: c.weight
+                                   for n, c in zip(nodes, sla)},
+                    client_priority={n: c.priority
+                                     for n, c in zip(nodes, sla)},
+                    client_deadline_us={n: c.p99_target_us
+                                        for n, c in zip(nodes, sla)
+                                        if c.p99_target_us is not None})
+            elif isinstance(service, ServiceConfig):
+                # plain DRR ignores weights/deadlines but still attributes
+                # per-class serve stats
+                service = replace(
+                    service,
+                    client_class={n: c.name for n, c in zip(nodes, sla)})
         if spec.serve_workers is not None:
             if not isinstance(service, ServiceConfig):
                 # a silent no-op would leave the pool sized by the custom
@@ -165,9 +190,16 @@ class Session:
                 client_cfg = replace(cfg,
                                      admission_hook=admission_hook_factory())
             elif box_config is None:
-                client_cfg = replace(
-                    cfg,
-                    admission_hook=create_policy("admission", spec.admission))
+                hook = create_policy("admission", spec.admission)
+                if sla is not None and isinstance(hook, CongestionAwareHook):
+                    # the client's SLA class parameterizes its admission
+                    # response: protected classes hold their window until
+                    # their own p99 breaks the target, best-effort classes
+                    # shed window on fewer ECN marks
+                    hook.protected = sla[i].protected
+                    hook.p99_target_us = sla[i].p99_target_us
+                    hook.ecn_mark_fraction = sla[i].ecn_mark_fraction
+                client_cfg = replace(cfg, admission_hook=hook)
             box = _SessionBox(node, peers=self.donors, config=client_cfg,
                               fabric=self.fabric)
             self._boxes.append(box)
@@ -226,12 +258,17 @@ class Session:
 
     # ---- capabilities ------------------------------------------------------
     def engine(self, client: int = 0) -> RDMABox:
-        """The client's node-level engine (page-addressed advanced API)."""
+        """The client's node-level engine (page-addressed advanced API).
+
+        Raises ``IndexError`` for ``client`` outside
+        ``[0, num_clients)`` and ``ClosedError`` after ``close()`` —
+        the same contract as every capability accessor below."""
         self._guard()
         return self._boxes[self._client_index(client)]
 
     def heap(self, client: int = 0) -> RemoteHeap:
-        """Handle-based remote memory (requires ``spec.heap_pages > 0``)."""
+        """Handle-based remote memory; ``alloc`` raises ``AllocError``
+        whenever ``spec.heap_pages`` is 0 or exhausted."""
         self._guard()
         i = self._client_index(client)
         if i not in self._heaps:

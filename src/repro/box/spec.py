@@ -52,6 +52,58 @@ class PolicySpec:
         return {"name": self.name, "params": dict(self.params)}
 
 
+@dataclass(frozen=True)
+class SLAClass:
+    """A tenant service level: dispatch weight, backlog priority, and an
+    optional tail-latency contract.
+
+    Instances are compiled from class *names* on ``ClusterSpec.sla`` via
+    the ``sla`` policy registry (built-ins: ``premium``, ``standard``,
+    ``best_effort``) plus per-spec overrides in ``ClusterSpec.sla_classes``
+    — only names and parameter dicts cross the JSON boundary.
+
+    Args:
+        name: the class name clients reference from ``ClusterSpec.sla``.
+        weight: DRR quantum multiplier on the donor dispatcher — a
+            weight-2 class accrues twice the per-round byte credit.
+        priority: backlog tie-break; higher-priority queues are visited
+            first under contention, so they are skipped *last*.
+        p99_target_us: optional tail-latency contract (virtual
+            microseconds). Drives deadline ordering on the donor and the
+            ``protected`` admission guard; ``None`` = best effort.
+        protected: when True, SLO-aware admission keeps this client's
+            window at full size under fabric ECN marks unless its OWN
+            observed p99 exceeds ``p99_target_us``.
+        ecn_mark_fraction: the fraction of a window-adjust interval's
+            completions that must carry ECN marks before admission calls
+            the path congested — lower = shrink earlier.
+
+    Raises:
+        ValueError: from ``validate`` on a non-positive weight or target,
+            or an ``ecn_mark_fraction`` outside ``(0, 1]``.
+    """
+
+    name: str
+    weight: float = 1.0
+    priority: int = 0
+    p99_target_us: Optional[float] = None
+    protected: bool = False
+    ecn_mark_fraction: float = 0.5
+
+    def validate(self) -> "SLAClass":
+        if not self.name:
+            raise ValueError("SLA class name must be non-empty")
+        if self.weight <= 0:
+            raise ValueError(f"SLA class {self.name!r}: weight must be > 0")
+        if self.p99_target_us is not None and self.p99_target_us <= 0:
+            raise ValueError(f"SLA class {self.name!r}: p99_target_us "
+                             f"must be > 0 (or None)")
+        if not 0.0 < self.ecn_mark_fraction <= 1.0:
+            raise ValueError(f"SLA class {self.name!r}: ecn_mark_fraction "
+                             f"must be in (0, 1]")
+        return self
+
+
 # fault-event fields that serialize verbatim (status is special-cased:
 # it crosses the JSON boundary as the WCStatus member name)
 _FAULT_FIELDS = ("kind", "node", "src", "dst", "after_ops", "at_us",
@@ -149,6 +201,14 @@ class ClusterSpec:
     # own capacity, which defaults to 0 = disabled); finer knobs
     # (promotion threshold) live on the ``cache`` policy below
     donor_cache_pages: Optional[int] = None
+    # per-client SLA class names — a single name applies to every client,
+    # a list gives one class per client (len == num_clients). Names
+    # resolve through the ``sla`` policy registry (premium / standard /
+    # best_effort built in) with optional per-spec parameter overrides or
+    # brand-new classes in ``sla_classes``. None = every client equal
+    # (the pre-SLO behavior, bit for bit).
+    sla: Optional[Union[str, List[str]]] = None
+    sla_classes: Optional[Dict[str, Dict[str, Any]]] = None
     # link model ({"latency_us": .., "gbps": .., "jitter_us": ..})
     link: Optional[Dict[str, Any]] = None
     # fault script (list of event dicts, see fault_plan_from_dicts)
@@ -199,7 +259,58 @@ class ClusterSpec:
                 f"heap_pages={self.heap_pages} must fit the per-client "
                 f"donor-region slice of {share} pages "
                 f"({self.donor_pages} pages / {self.num_clients} clients)")
+        if self.sla is not None:
+            if not isinstance(self.sla, str):
+                if len(self.sla) != self.num_clients:
+                    raise ValueError(
+                        f"sla lists one class per client: got "
+                        f"{len(self.sla)} names for {self.num_clients} "
+                        f"clients (or pass a single name for all)")
+            self.sla_for_clients()   # resolves + validates every class
+        elif self.sla_classes:
+            # overrides with nothing referencing them are a config typo
+            raise ValueError("sla_classes given but sla is None — name "
+                             "the classes clients should use via sla")
         return self
+
+    # ---- SLA compilation ---------------------------------------------------
+    def resolve_sla_class(self, name: str) -> SLAClass:
+        """Resolve one class name to a validated ``SLAClass``.
+
+        Resolution order: a registered ``sla`` policy (built-ins:
+        ``premium``/``standard``/``best_effort``) instantiated with this
+        spec's ``sla_classes[name]`` overrides, else a brand-new class
+        built purely from ``sla_classes[name]``.
+
+        Raises:
+            ValueError: when ``name`` is neither registered nor defined
+                in ``sla_classes``, or the class parameters are invalid.
+        """
+        from .policies import _REGISTRIES, create_policy   # lazy: cycle
+        params = dict((self.sla_classes or {}).get(name, {}))
+        if name in _REGISTRIES["sla"]:
+            cls = create_policy("sla", PolicySpec(name, params))
+        elif name in (self.sla_classes or {}):
+            cls = SLAClass(name=name, **params)
+        else:
+            from .policies import policy_names
+            raise ValueError(
+                f"unknown SLA class {name!r}; registered: "
+                f"{policy_names('sla')}, spec-defined: "
+                f"{sorted(self.sla_classes or {})}")
+        if not isinstance(cls, SLAClass):
+            raise ValueError(f"sla policy {name!r} must produce an "
+                             f"SLAClass, got {type(cls).__name__}")
+        return cls.validate()
+
+    def sla_for_clients(self) -> Optional[List[SLAClass]]:
+        """Compile ``sla`` into one validated ``SLAClass`` per client
+        (index-aligned with client endpoints), or None when unset."""
+        if self.sla is None:
+            return None
+        names = ([self.sla] * self.num_clients
+                 if isinstance(self.sla, str) else list(self.sla))
+        return [self.resolve_sla_class(n) for n in names]
 
     # ---- serialization -----------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:

@@ -20,8 +20,9 @@ from .descriptors import (
     contiguous_runs,
 )
 from .errors import AllocError, BoxError, ClosedError
+from .hist import LatencyHistogram
 from .merge_queue import MergeQueue
-from .nic import NICCostModel, ServiceConfig, SimulatedNIC
+from .nic import NICCostModel, ServiceConfig, SimulatedNIC, SLOServiceConfig
 from .paging import DiskTier, PrefetchBatch, RemotePagingSystem, StripedPlacement
 from .polling import PollConfig, Poller, PollMode
 from .rdmabox import (
@@ -41,7 +42,8 @@ __all__ = [
     "resolve_reg_mode", "Channel", "ChannelSet", "CompletionQueue",
     "PAGE_SIZE", "RegMode", "TransferDescriptor", "Verb", "WCStatus",
     "WorkCompletion", "WorkRequest", "contiguous_runs", "MergeQueue",
-    "NICCostModel", "SimulatedNIC", "DiskTier", "PrefetchBatch",
+    "LatencyHistogram", "NICCostModel", "ServiceConfig", "SLOServiceConfig",
+    "SimulatedNIC", "DiskTier", "PrefetchBatch",
     "RemotePagingSystem", "StripedPlacement",
     "Poller", "PollConfig", "PollMode", "BoxConfig", "RDMABox",
     "BatchFuture", "BatchTransferError",

@@ -17,6 +17,7 @@ import threading
 from typing import Optional
 
 from .descriptors import PAGE_SIZE, AtomicCounter, WCStatus, WorkCompletion
+from .hist import LatencyHistogram
 
 
 class AdmissionHook:
@@ -53,17 +54,31 @@ class CongestionAwareHook(AdmissionHook):
     The hook also consumes the fabric's explicit congestion signal: every
     ``WorkCompletion`` carries an ECN-style mark (``ecn_mult`` > 1 when
     any leg of the path had an active congestion/straggler multiplier).
-    With ``ecn_sensitive=True`` a marked majority of the adjustment
-    window forces a shrink even while the latency EWMA lags — explicit
-    marks lead the latency signal by up to a full EWMA time constant,
-    and they cannot be fooled by a polluted calibration baseline.
+    With ``ecn_sensitive=True`` a marked ``ecn_mark_fraction`` of the
+    adjustment window forces a shrink even while the latency EWMA lags —
+    explicit marks lead the latency signal by up to a full EWMA time
+    constant, and they cannot be fooled by a polluted calibration
+    baseline. Lowering the fraction makes a client shed window *earlier*
+    under fabric congestion — how best-effort tenants are made to absorb
+    an episode first.
+
+    SLO protection (``protected=True`` + ``p99_target_us``): a protected
+    client ignores every congestion signal — marks and EWMA alike — and
+    keeps its full window until its OWN observed p99 (a built-in
+    ``LatencyHistogram`` over successful completions) exceeds the target.
+    This is the admission half of the SLO story: premium windows stay
+    untouched while best-effort windows shrink, and only a premium tail
+    actually degrading makes premium back off too.
     """
 
     def __init__(self, shrink: float = 0.5, grow: float = 1.5,
                  latency_factor: float = 3.0, min_fraction: float = 1 / 32,
                  ewma_alpha: float = 0.25, adjust_every: int = 8,
-                 calibration: int = 24, ecn_sensitive: bool = True) -> None:
+                 calibration: int = 24, ecn_sensitive: bool = True,
+                 ecn_mark_fraction: float = 0.5, protected: bool = False,
+                 p99_target_us: Optional[float] = None) -> None:
         assert 0.0 < shrink < 1.0 < grow
+        assert 0.0 < ecn_mark_fraction <= 1.0
         self.shrink = shrink
         self.grow = grow
         self.latency_factor = latency_factor
@@ -72,6 +87,10 @@ class CongestionAwareHook(AdmissionHook):
         self.adjust_every = adjust_every
         self.calibration = calibration
         self.ecn_sensitive = ecn_sensitive
+        self.ecn_mark_fraction = ecn_mark_fraction
+        self.protected = protected
+        self.p99_target_us = p99_target_us
+        self.latency = LatencyHistogram()
         self._lock = threading.Lock()
         self._fraction = 1.0
         self._base_us: Optional[float] = None
@@ -89,6 +108,7 @@ class CongestionAwareHook(AdmissionHook):
         lat = wc.latency_us
         if lat <= 0.0:
             return
+        self.latency.record(lat)
         marked = wc.ecn_mult > 1.0
         if marked:
             self.ecn_marks.add()
@@ -110,15 +130,22 @@ class CongestionAwareHook(AdmissionHook):
             self._since_adjust += 1
             if self._since_adjust < self.adjust_every:
                 return
-            # a marked majority of the window is congestion even when the
-            # latency EWMA has not (yet) crossed the threshold
+            # a marked ecn_mark_fraction of the window is congestion even
+            # when the latency EWMA has not (yet) crossed the threshold
             ecn_congested = (self.ecn_sensitive
-                             and self._marks_since_adjust * 2
-                             >= self.adjust_every)
+                             and self._marks_since_adjust
+                             >= self.ecn_mark_fraction * self.adjust_every)
             self._since_adjust = 0
             self._marks_since_adjust = 0
-            if ecn_congested \
-                    or self._ewma_us > self.latency_factor * self._base_us:
+            congested = (ecn_congested or
+                         self._ewma_us > self.latency_factor * self._base_us)
+            if congested and self.protected:
+                # SLO guard: a protected client backs off only once its
+                # own tail contract is actually broken
+                congested = (self.p99_target_us is not None
+                             and self.latency.percentile(99.0)
+                             > self.p99_target_us)
+            if congested:
                 new = max(self.min_fraction, self._fraction * self.shrink)
                 if new < self._fraction:
                     self.shrinks.add()
@@ -138,7 +165,7 @@ class CongestionAwareHook(AdmissionHook):
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "window_fraction": self._fraction,
                 "base_latency_us": self._base_us,
                 "ewma_latency_us": self._ewma_us,
@@ -146,6 +173,11 @@ class CongestionAwareHook(AdmissionHook):
                 "grows": self.grows.value,
                 "ecn_marks": self.ecn_marks.value,
             }
+        out["p99_us"] = self.latency.percentile(99.0)
+        out["protected"] = self.protected
+        if self.p99_target_us is not None:
+            out["p99_target_us"] = self.p99_target_us
+        return out
 
 
 class AdmissionController:

@@ -45,6 +45,7 @@ from .descriptors import (
     WCStatus,
     WorkCompletion,
 )
+from .hist import LatencyHistogram
 from .region import CacheTier, RegionDirectory, RemoteRegion
 
 # donor-side service constants: a WRITE-with-imm-style ack is one small
@@ -71,9 +72,74 @@ class ServiceConfig:
     merge: bool = True            # drain a deficit's worth as ONE vector
     coalesce_acks: bool = True    # one ack transmit + CQ post per round
     workers: Optional[int] = None  # service workers (None → cost.num_pus)
+    # client node -> SLA class name, for per-class serve accounting
+    # (``nic.<n>.service.per_class.*``). Filled by the Session from
+    # ``ClusterSpec.sla``, never from JSON params; unlisted clients land
+    # under "default".
+    client_class: Dict[int, str] = field(default_factory=dict)
 
     def num_workers(self, num_pus: int) -> int:
         return max(1, self.workers if self.workers is not None else num_pus)
+
+    def quantum_for(self, client: int) -> int:
+        """Per-visit deficit top-up for ``client`` — plain DRR gives every
+        client the same quantum."""
+        return self.quantum_bytes
+
+    def visit_offsets(self, order: List[int], start: int,
+                      queues: Dict[int, Deque["_DonorJob"]]) -> List[int]:
+        """Dispatcher visit plan (serve lock held): absolute positions
+        (taken mod ``len(order)``) in the order the DRR scan should try
+        clients this pass. Plain DRR visits them round-robin from the
+        rotation pointer."""
+        return list(range(start, start + len(order)))
+
+
+@dataclass
+class SLOServiceConfig(ServiceConfig):
+    """SLA-aware donor dispatch (the ``slo`` service policy).
+
+    Same DRR plane, worker pool, merging, and single-run-per-client
+    ordering invariant as :class:`ServiceConfig` — only two decisions
+    change, both driven by the clients' SLA classes:
+
+    * **weighted quanta** — a client's per-visit deficit top-up is
+      ``quantum_bytes * weight``, so premium queues drain more bytes per
+      rotation and bank affordability for large WQEs sooner;
+    * **deadline-aware visit order** — each pass visits backlogged
+      clients by (priority desc, head-job deadline asc, rotation order),
+      where a head job's deadline is its post stamp plus the class's
+      ``p99_target_us``. Under backlog the premium queue is tried first
+      — i.e. skipped *last* — while classes without a target fall back
+      to pure priority-then-rotation order.
+
+    The per-client maps are compiled by the Session from
+    ``ClusterSpec.sla``; JSON params never carry them.
+    """
+
+    client_weight: Dict[int, float] = field(default_factory=dict)
+    client_priority: Dict[int, int] = field(default_factory=dict)
+    client_deadline_us: Dict[int, float] = field(default_factory=dict)
+
+    def quantum_for(self, client: int) -> int:
+        w = self.client_weight.get(client, 1.0)
+        return max(PAGE_SIZE, int(self.quantum_bytes * w))
+
+    def visit_offsets(self, order: List[int], start: int,
+                      queues: Dict[int, Deque["_DonorJob"]]) -> List[int]:
+        n = len(order)
+
+        def key(pos: int):
+            client = order[pos % n]
+            q = queues.get(client)
+            deadline = float("inf")
+            target = self.client_deadline_us.get(client)
+            if q and target is not None:
+                deadline = q[0].post_v + target
+            return (-self.client_priority.get(client, 0), deadline,
+                    (pos - start) % n)
+
+        return sorted(range(start, start + n), key=key)
 
 
 @dataclass
@@ -287,6 +353,12 @@ class SimulatedNIC:
         self._merged_jobs = 0
         self._coalesced_acks = AtomicCounter()
         self._coalesced_jobs = AtomicCounter()
+        # per-SLA-class serve accounting ([ops, bytes] + service-latency
+        # histogram per class name); written by service workers outside
+        # the serve lock, so it gets its own small lock
+        self._class_lock = threading.Lock()
+        self._class_served: Dict[str, List[int]] = {}
+        self._class_hist: Dict[str, LatencyHistogram] = {}
         self._serve_threads: List[threading.Thread] = []
 
     def _ensure_started(self) -> None:
@@ -639,7 +711,7 @@ class SimulatedNIC:
         for c, q in self._serve_queues.items():
             if not q or c in self._serve_busy:
                 continue
-            if self._serve_deficit[c] + self.service.quantum_bytes \
+            if self._serve_deficit[c] + self.service.quantum_for(c) \
                     >= q[0].desc.nbytes:
                 return True
             banking = True
@@ -647,57 +719,67 @@ class SimulatedNIC:
 
     def _next_run_locked(self, wid: int) -> List[_DonorJob]:
         """Deficit-round-robin dispatch across attached clients (lock
-        held): pick the next backlogged client, top its deficit up by one
-        quantum if lagging, and drain up to a deficit's worth of its queue
-        as ONE run (a single job when merging is disabled). May return []
-        while a jumbo WQE is still accumulating deficit. A client whose
-        previous run is still in flight is skipped — its jobs must be
-        serviced in arrival order. Accounting for the run (per client and
-        per worker) happens here, atomically with the dispatch
-        decision."""
+        held): visit backlogged clients in the service policy's order
+        (plain DRR: round-robin from the rotation pointer; SLO:
+        priority/deadline first), top the visited client's deficit up by
+        its per-client quantum if lagging, and drain up to a deficit's
+        worth of its queue as ONE run (a single job when merging is
+        disabled). May return [] while a jumbo WQE is still accumulating
+        deficit. A client whose previous run is still in flight is
+        skipped — its jobs must be serviced in arrival order, whatever
+        the policy. Accounting for the run (per client, per worker, per
+        SLA class) happens here, atomically with the dispatch decision."""
         svc = self.service
         n = len(self._serve_order)
-        for _ in range(n):
-            client = self._serve_order[self._serve_idx % n]
+        start = self._serve_idx
+        selected = None
+        for pos in svc.visit_offsets(self._serve_order, start,
+                                     self._serve_queues):
+            client = self._serve_order[pos % n]
             q = self._serve_queues[client]
             if not q or client in self._serve_busy:
-                self._serve_idx += 1
                 continue
             if self._serve_deficit[client] < q[0].desc.nbytes:
-                self._serve_deficit[client] += svc.quantum_bytes
+                self._serve_deficit[client] += svc.quantum_for(client)
             if self._serve_deficit[client] < q[0].desc.nbytes:
-                self._serve_idx += 1        # keep banking, try next client
-                continue
-            run = [q.popleft()]
-            self._serve_deficit[client] -= run[0].desc.nbytes
-            if svc.merge:
-                while q and self._serve_deficit[client] >= q[0].desc.nbytes:
-                    job = q.popleft()
-                    self._serve_deficit[client] -= job.desc.nbytes
-                    run.append(job)
-            # rotate away only when this client's deficit is spent (or its
-            # queue drained) — with merge=False a client still holding
-            # affordable deficit keeps the pointer, so per-job runs retain
-            # the same per-rotation BYTE share as merged runs
-            if not q:
-                self._serve_deficit[client] = 0    # idle flows bank nothing
-                self._serve_idx += 1
-            elif self._serve_deficit[client] < q[0].desc.nbytes:
-                self._serve_idx += 1
-            nbytes = sum(j.desc.nbytes for j in run)
-            served = self._served.setdefault(client, [0, 0])
-            served[0] += len(run)
-            served[1] += nbytes
-            by_worker = self._served_by_worker[wid]
-            by_worker[0] += len(run)
-            by_worker[1] += nbytes
-            self._serve_rounds += 1
-            if len(run) > 1:
-                self._merged_runs += 1
-                self._merged_jobs += len(run)
-            self._serve_busy.add(client)
-            return run
-        return []
+                continue                    # keep banking, try next client
+            selected = (pos, client, q)
+            break
+        if selected is None:
+            self._serve_idx = start + n     # full pass, nothing ready
+            return []
+        pos, client, q = selected
+        run = [q.popleft()]
+        self._serve_deficit[client] -= run[0].desc.nbytes
+        if svc.merge:
+            while q and self._serve_deficit[client] >= q[0].desc.nbytes:
+                job = q.popleft()
+                self._serve_deficit[client] -= job.desc.nbytes
+                run.append(job)
+        # rotate away only when this client's deficit is spent (or its
+        # queue drained) — with merge=False a client still holding
+        # affordable deficit keeps the pointer, so per-job runs retain
+        # the same per-rotation BYTE share as merged runs
+        if not q:
+            self._serve_deficit[client] = 0    # idle flows bank nothing
+            self._serve_idx = pos + 1
+        elif self._serve_deficit[client] < q[0].desc.nbytes:
+            self._serve_idx = pos + 1
+        else:
+            self._serve_idx = pos
+        nbytes = sum(j.desc.nbytes for j in run)
+        served = self._served.setdefault(client, [0, 0])
+        served[0] += len(run)
+        served[1] += nbytes
+        by_worker = self._served_by_worker[wid]
+        by_worker[0] += len(run)
+        by_worker[1] += nbytes
+        self._serve_rounds += 1
+        if len(run) > 1:
+            self._merged_runs += 1
+            self._merged_jobs += len(run)
+        self._serve_busy.add(client)
+        return run
 
     def _serve_run(self, pacer: Pacer, jobs: List[_DonorJob]) -> None:
         """Service one per-client run: ONE batched ingress PU charge and
@@ -751,6 +833,7 @@ class SimulatedNIC:
         stats = client_nic.stats if client_nic is not None else self.stats
         errors = 0
         deliveries: List[Tuple[object, WorkCompletion, float]] = []
+        latencies: List[float] = []
         for job, status, (ack_v, ack_delay) in zip(jobs, statuses, acks):
             wc = WorkCompletion.for_descriptor(
                 job.desc, status, post_v=job.post_v,
@@ -761,7 +844,21 @@ class SimulatedNIC:
                 ecn_mult=max(job.fwd_mult, mult))
             if status is not WCStatus.SUCCESS:
                 errors += 1
+            else:
+                latencies.append(wc.latency_us)
             deliveries.append((job.cq, wc, job.fwd_delay_real + ack_delay))
+        # per-SLA-class accounting: which class this client belongs to is
+        # policy data (service.client_class); successful jobs record
+        # their post→ack virtual latency into the class histogram
+        cls_name = self.service.client_class.get(client, "default")
+        with self._class_lock:
+            acc = self._class_served.setdefault(cls_name, [0, 0])
+            acc[0] += len(jobs)
+            acc[1] += sum(j.desc.nbytes for j in jobs)
+            hist = self._class_hist.get(cls_name)
+            if hist is None:
+                hist = self._class_hist[cls_name] = LatencyHistogram()
+        hist.record_many(latencies)
         stats.completions.add(len(jobs))
         if errors:
             stats.wc_errors.add(errors)
@@ -866,9 +963,11 @@ class SimulatedNIC:
     def service_snapshot(self) -> Dict[str, object]:
         """Service-plane accounting: per-worker served WQEs/bytes, DRR
         rounds, the two receive-side batching counters (merged runs,
-        coalesced acks), and the hot-page cache tier's counters under
-        ``cache`` (zeroed shape when no tier is attached). Lives under
-        ``nic.<node>.service.*`` in the session stats tree."""
+        coalesced acks), per-SLA-class serve counters + latency
+        histograms under ``per_class``, and the hot-page cache tier's
+        counters under ``cache`` (zeroed shape when no tier is attached).
+        Lives under ``nic.<node>.service.*`` in the session stats
+        tree."""
         region = self.directory.get(self.node_id)
         tier = region.cache if region is not None else None
         cache = (tier.snapshot() if tier is not None
@@ -881,6 +980,13 @@ class SimulatedNIC:
             rounds = self._serve_rounds
             merged_runs = self._merged_runs
             merged_jobs = self._merged_jobs
+        with self._class_lock:
+            per_class = {
+                name: {"ops": acc[0], "bytes": acc[1],
+                       "latency": self._class_hist[name].snapshot()
+                       if name in self._class_hist
+                       else LatencyHistogram.empty_snapshot()}
+                for name, acc in self._class_served.items()}
         return {
             "serve_workers": self.serve_workers,
             "workers": workers,
@@ -890,5 +996,6 @@ class SimulatedNIC:
             "merged_jobs": merged_jobs,
             "coalesced_acks": self._coalesced_acks.value,
             "coalesced_jobs": self._coalesced_jobs.value,
+            "per_class": per_class,
             "cache": cache,
         }

@@ -44,6 +44,7 @@ from .descriptors import (
     WorkRequest,
 )
 from .errors import BoxError, ClosedError
+from .hist import LatencyHistogram
 from .merge_queue import MergeQueue
 from .nic import NICCostModel
 from .polling import PollConfig, Poller, PollMode
@@ -296,6 +297,10 @@ class RDMABox:
         self._retries_lock = threading.Lock()
         self.rnr_retries = AtomicCounter()
         self.callback_errors = AtomicCounter()
+        # post→completion virtual latency of every successful transfer —
+        # the client-side tail the paper's Fig. 1 is about; lands at
+        # ``client.<i>.box.latency.*`` in the session stats tree
+        self.latency = LatencyHistogram()
         self._cb_log_lock = threading.Lock()
         self._logged_cb_sites: set = set()
         self._closed = False
@@ -398,6 +403,7 @@ class RDMABox:
         return {
             "poll": self.poller.stats.snapshot(),
             "admission": self.admission.snapshot(),
+            "latency": self.latency.snapshot(),
             "rnr_retries": self.rnr_retries.value,
             "callback_errors": self.callback_errors.value,
             "pending_requests": self._pending,
@@ -544,6 +550,8 @@ class RDMABox:
             if app is not None:
                 app(wc)
         self.admission.release(total)
+        self.latency.record_many(
+            wc.latency_us for wc in wcs if wc.status is WCStatus.SUCCESS)
         # requests being retried stay in flight; everything else resolves now
         work: List[Tuple[WorkCompletion, WorkRequest]] = []
         for wc in wcs:

@@ -19,7 +19,8 @@ A ``Fabric`` owns:
   delayed completion delivery.
 
 ``RDMABox`` takes a fabric endpoint instead of constructing its own NIC;
-``MemoryCluster`` is the builder facade most callers use.
+``repro.box.open(ClusterSpec(...))`` is the builder facade most callers
+use (``MemoryCluster`` survives only as its deprecation shim).
 """
 
 from __future__ import annotations

@@ -369,26 +369,31 @@ def test_session_never_warns_deprecation():
 EXPECTED_ALL = {
     "AllocError", "BatchFuture", "BatchTransferError", "BoxError",
     "ClosedError", "ClusterSpec", "KVStore", "PAGE_SIZE", "Pager",
-    "PolicySpec", "RemoteBuffer", "RemoteHeap", "Session", "TensorStore",
-    "TransferError", "TransferFuture", "create_policy", "flatten_stats",
-    "open", "policy_names", "register_policy",
+    "PolicySpec", "RemoteBuffer", "RemoteHeap", "SLAClass", "Session",
+    "TensorStore", "TransferError", "TransferFuture", "create_policy",
+    "flatten_stats", "open", "policy_names", "register_policy",
 }
+
+
+def _public_api_section(path):
+    section = re.search(r"## Public API\n(.*?)(?:\n## |\Z)",
+                        path.read_text(), flags=re.S)
+    assert section, f"{path.name} lost its 'Public API' section"
+    return set(re.findall(r"`([A-Za-z_][A-Za-z0-9_.]*)`", section.group(1)))
 
 
 def test_public_all_matches_documented_names():
     assert set(box.__all__) == EXPECTED_ALL
     for name in box.__all__:
         assert getattr(box, name) is not None
-    # every public name appears in the README's Public API section
+    # every public name appears in the README's Public API section AND
+    # the docs tree's canonical list (docs/architecture.md)
     import pathlib
-    readme = (pathlib.Path(__file__).resolve().parent.parent
-              / "README.md").read_text()
-    section = re.search(r"## Public API\n(.*?)(?:\n## |\Z)", readme,
-                        flags=re.S)
-    assert section, "README.md lost its 'Public API' section"
-    documented = set(re.findall(r"`([A-Za-z_][A-Za-z0-9_.]*)`",
-                                section.group(1)))
-    missing = {n for n in EXPECTED_ALL
-               if n not in documented
-               and f"box.{n}" not in documented}
-    assert not missing, f"undocumented public names: {sorted(missing)}"
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for page in (root / "README.md", root / "docs" / "architecture.md"):
+        documented = _public_api_section(page)
+        missing = {n for n in EXPECTED_ALL
+                   if n not in documented
+                   and f"box.{n}" not in documented}
+        assert not missing, \
+            f"{page.name}: undocumented public names: {sorted(missing)}"

@@ -1,0 +1,128 @@
+"""Fixed-bucket latency histogram (``core/hist.py``): quantile accuracy
+on known distributions, per-worker merge equivalence, and geometry
+guards."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.hist import LatencyHistogram
+
+# one bucket spans a 10^(1/16) ratio, so an upper-edge quantile estimate
+# can overshoot the exact value by at most ~15.5% (and never undershoots)
+BUCKET_RATIO = 10.0 ** (1.0 / 16.0)
+
+
+def test_exact_quantiles_on_degenerate_distribution():
+    # every sample identical: all quantiles clamp to the exact max
+    h = LatencyHistogram()
+    for _ in range(100):
+        h.record(5.0)
+    for q in (0.0, 50.0, 99.0, 99.9, 100.0):
+        assert h.percentile(q) == 5.0
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert snap["mean_us"] == pytest.approx(5.0)
+    assert snap["max_us"] == 5.0
+
+
+def test_quantiles_on_known_two_point_distribution():
+    # 99 samples at 10us, 1 at 1000us: p50 covers the 10us bucket,
+    # p99.9 must see the outlier
+    h = LatencyHistogram()
+    h.record_many([10.0] * 99 + [1000.0])
+    assert 10.0 <= h.percentile(50.0) <= 10.0 * BUCKET_RATIO
+    assert 10.0 <= h.percentile(99.0) <= 10.0 * BUCKET_RATIO
+    assert h.percentile(99.9) == 1000.0      # clamped to exact max
+
+
+def test_quantiles_track_numpy_within_bucket_error():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=3.0, sigma=1.0, size=10_000)
+    h = LatencyHistogram()
+    h.record_many(samples)
+    for q in (50.0, 90.0, 99.0, 99.9):
+        exact = float(np.percentile(samples, q))
+        est = h.percentile(q)
+        # upper-edge estimate: never below exact, at most one bucket over
+        assert exact <= est <= exact * BUCKET_RATIO * 1.001, (q, exact, est)
+
+
+def test_percentiles_are_monotone_and_validated():
+    h = LatencyHistogram()
+    h.record_many([1.0, 5.0, 20.0, 400.0, 9000.0])
+    qs = [0.0, 25.0, 50.0, 75.0, 99.0, 99.9, 100.0]
+    vals = [h.percentile(q) for q in qs]
+    assert vals == sorted(vals)
+    assert vals[-1] == 9000.0
+    with pytest.raises(ValueError):
+        h.percentile(-1.0)
+    with pytest.raises(ValueError):
+        h.percentile(100.5)
+
+
+def test_merge_of_per_worker_histograms_equals_direct():
+    rng = np.random.default_rng(11)
+    samples = rng.exponential(scale=50.0, size=4096) + 0.5
+    direct = LatencyHistogram()
+    direct.record_many(samples)
+    workers = [LatencyHistogram() for _ in range(4)]
+    for i, chunk in enumerate(np.array_split(samples, 4)):
+        workers[i].record_many(chunk)
+    merged = LatencyHistogram()
+    for w in workers:
+        merged.merge(w)
+    m, d = merged.snapshot(), direct.snapshot()
+    assert m["count"] == d["count"]
+    assert m["max_us"] == d["max_us"]
+    # summation order differs across workers: mean equal up to fp noise
+    assert m["mean_us"] == pytest.approx(d["mean_us"])
+    for q in (50.0, 99.0, 99.9):
+        assert merged.percentile(q) == direct.percentile(q)
+
+
+def test_merge_rejects_geometry_mismatch():
+    h = LatencyHistogram()
+    with pytest.raises(ValueError, match="geometry"):
+        h.merge(LatencyHistogram(buckets_per_decade=8))
+    with pytest.raises(ValueError, match="geometry"):
+        h.merge(LatencyHistogram(lo_us=1.0))
+
+
+def test_out_of_range_and_non_positive_samples():
+    h = LatencyHistogram(lo_us=1.0, hi_us=1000.0)
+    h.record(0.0)                       # dropped
+    h.record(-3.0)                      # dropped
+    assert h.snapshot()["count"] == 0
+    h.record(0.01)                      # underflow bucket
+    h.record(1e6)                       # overflow bucket
+    snap = h.snapshot()
+    assert snap["count"] == 2
+    assert snap["max_us"] == 1e6        # max is tracked exactly
+    assert h.percentile(100.0) == 1000.0   # overflow reports the hi edge
+    assert h.percentile(0.0) <= 1.0     # underflow reports the low edge
+
+
+def test_empty_snapshot_shape():
+    empty = LatencyHistogram().snapshot()
+    assert empty == LatencyHistogram.empty_snapshot()
+    assert set(empty) == {"count", "mean_us", "p50_us", "p99_us",
+                          "p999_us", "max_us"}
+    assert all(v == 0 for v in empty.values())
+
+
+def test_concurrent_recording_loses_nothing():
+    h = LatencyHistogram()
+    n, threads = 2000, 8
+
+    def worker(tid):
+        for i in range(n):
+            h.record(1.0 + (tid * n + i) % 100)
+
+    ts = [threading.Thread(target=worker, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert h.snapshot()["count"] == n * threads

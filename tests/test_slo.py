@@ -1,0 +1,198 @@
+"""Multi-tenant SLO plane: SLA classes on the spec (round-trip,
+resolution, validation), the ``slo`` service policy's dispatch decisions,
+SLO-protected admission, and the per-class stats wiring end to end."""
+
+from collections import deque
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro.box as box
+from repro.core import PAGE_SIZE
+from repro.core.admission import CongestionAwareHook
+from repro.core.descriptors import Verb, WCStatus, WorkCompletion
+from repro.core.nic import ServiceConfig, SLOServiceConfig
+
+FAST = dict(nic_scale=1e-7, window_bytes=1 << 20)
+PAGE = np.arange(PAGE_SIZE, dtype=np.uint8)
+
+
+# ---- spec: round-trip + resolution ----------------------------------------
+def test_sla_spec_round_trips_through_json():
+    spec = box.ClusterSpec(
+        num_clients=3, service="slo", admission="congestion",
+        sla=["premium", "standard", "best_effort"],
+        sla_classes={"premium": {"p99_target_us": 12_000.0}})
+    assert box.ClusterSpec.from_json(spec.to_json()) == spec
+    assert box.ClusterSpec.from_dict(spec.to_dict()) == spec
+    classes = spec.sla_for_clients()
+    assert [c.name for c in classes] == ["premium", "standard",
+                                         "best_effort"]
+    assert classes[0].p99_target_us == 12_000.0     # override applied
+    assert classes[0].protected and classes[0].weight == 4.0
+    assert classes[2].ecn_mark_fraction == 0.25
+
+
+def test_single_sla_name_broadcasts_to_every_client():
+    spec = box.ClusterSpec(num_clients=3, sla="standard")
+    classes = spec.validate().sla_for_clients()
+    assert len(classes) == 3
+    assert all(c.name == "standard" and c.weight == 2.0 for c in classes)
+
+
+def test_spec_defined_class_without_registration():
+    spec = box.ClusterSpec(
+        num_clients=1, sla="batch",
+        sla_classes={"batch": {"weight": 0.5, "priority": -1,
+                               "ecn_mark_fraction": 0.1}})
+    cls = spec.validate().sla_for_clients()[0]
+    assert isinstance(cls, box.SLAClass)
+    assert (cls.weight, cls.priority, cls.ecn_mark_fraction) == \
+        (0.5, -1, 0.1)
+
+
+def test_unknown_class_and_bad_shapes_rejected():
+    with pytest.raises(ValueError, match="unknown SLA class 'gold'"):
+        box.ClusterSpec(num_clients=1, sla="gold").validate()
+    with pytest.raises(ValueError, match="one class per client"):
+        box.ClusterSpec(num_clients=3, sla=["premium"]).validate()
+    with pytest.raises(ValueError, match="sla_classes given but sla"):
+        box.ClusterSpec(sla_classes={"premium": {}}).validate()
+    with pytest.raises(ValueError, match="weight must be > 0"):
+        box.ClusterSpec(num_clients=1, sla="x",
+                        sla_classes={"x": {"weight": 0.0}}).validate()
+    with pytest.raises(ValueError, match="ecn_mark_fraction"):
+        box.ClusterSpec(
+            num_clients=1, sla="x",
+            sla_classes={"x": {"ecn_mark_fraction": 0.0}}).validate()
+
+
+# ---- the slo service policy ------------------------------------------------
+def _queues(jobs):
+    return {c: deque(SimpleNamespace(post_v=v) for v in vs)
+            for c, vs in jobs.items()}
+
+
+def test_slo_quantum_scales_with_weight():
+    svc = SLOServiceConfig(quantum_bytes=64 * PAGE_SIZE,
+                           client_weight={1: 4.0, 2: 0.001})
+    assert svc.quantum_for(1) == 256 * PAGE_SIZE
+    assert svc.quantum_for(2) == PAGE_SIZE          # floored at one page
+    assert svc.quantum_for(99) == 64 * PAGE_SIZE    # unlisted: weight 1
+
+
+def test_slo_visit_order_priority_then_deadline_then_rotation():
+    order = [10, 11, 12]
+    # client 11 is premium (priority 2, tight deadline); 10 and 12 tie on
+    # priority so the older head job (12) goes first
+    svc = SLOServiceConfig(
+        client_priority={11: 2},
+        client_deadline_us={10: 1000.0, 11: 1000.0, 12: 1000.0})
+    queues = _queues({10: [500.0], 11: [900.0], 12: [100.0]})
+    visits = [order[p % 3] for p in svc.visit_offsets(order, 0, queues)]
+    assert visits == [11, 12, 10]
+    # without SLA maps the plan degenerates to plain rotation
+    plain = SLOServiceConfig()
+    assert plain.visit_offsets(order, 1, _queues({})) == \
+        ServiceConfig().visit_offsets(order, 1, _queues({}))
+
+
+def test_slo_visit_order_respects_rotation_start():
+    order = [7, 8]
+    svc = SLOServiceConfig()            # no classes: pure rotation
+    assert [order[p % 2] for p in svc.visit_offsets(order, 1, _queues({}))] \
+        == [8, 7]
+
+
+# ---- SLO-protected admission ----------------------------------------------
+def _wc(lat_us, marked=False):
+    return WorkCompletion(wr_id=0, verb=Verb.WRITE, dest_node=1,
+                          nbytes=PAGE_SIZE, status=WCStatus.SUCCESS,
+                          post_vtime_us=0.0, complete_vtime_us=lat_us,
+                          ecn_mult=3.0 if marked else 1.0)
+
+
+def test_protected_hook_ignores_marks_until_own_p99_breaks():
+    hook = CongestionAwareHook(adjust_every=4, calibration=4,
+                               protected=True, p99_target_us=500.0)
+    for _ in range(4):                  # calibration at healthy latency
+        hook.observe(_wc(10.0))
+    for _ in range(16):                 # every completion ECN-marked, but
+        hook.observe(_wc(10.0, marked=True))    # own tail is fine
+    assert hook.window_fraction == 1.0
+    assert hook.snapshot()["protected"] is True
+    for _ in range(64):                 # now the tail contract breaks
+        hook.observe(_wc(2000.0, marked=True))
+    assert hook.window_fraction < 1.0
+
+
+def test_unprotected_hook_sheds_on_mark_fraction():
+    sensitive = CongestionAwareHook(adjust_every=8, calibration=4,
+                                    ecn_mark_fraction=0.25)
+    lax = CongestionAwareHook(adjust_every=8, calibration=4,
+                              ecn_mark_fraction=1.0)
+    for hook in (sensitive, lax):
+        for _ in range(4):
+            hook.observe(_wc(10.0))
+        for i in range(16):             # every 4th completion marked (25%)
+            hook.observe(_wc(10.0, marked=(i % 4 == 0)))
+    assert sensitive.window_fraction < 1.0      # 25% marks trip 0.25
+    assert lax.window_fraction == 1.0           # but not 100%-threshold
+
+
+# ---- end to end ------------------------------------------------------------
+def test_session_wires_sla_into_service_admission_and_stats():
+    spec = box.ClusterSpec(
+        num_donors=1, donor_pages=2048, num_clients=2, replication=1,
+        service="slo", admission="congestion",
+        sla=["premium", "best_effort"], **FAST)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        for i in range(2):
+            s.engine(i).write(donor, i, PAGE).wait(10)
+        s.flush()
+        stats = s.stats()
+        per_class = stats["nic"][str(donor)]["service"]["per_class"]
+        assert set(per_class) == {"premium", "best_effort"}
+        for d in per_class.values():
+            assert d["ops"] >= 1
+            assert d["latency"]["count"] >= 1
+            assert d["latency"]["p99_us"] > 0
+        hook0 = stats["client"]["0"]["box"]["admission"]["hook"]
+        assert hook0["protected"] is True
+        assert hook0["p99_target_us"] == 5000.0
+        hook1 = stats["client"]["1"]["box"]["admission"]["hook"]
+        assert hook1["protected"] is False
+        for i in range(2):
+            lat = stats["client"][str(i)]["box"]["latency"]
+            assert lat["count"] >= 1 and lat["p50_us"] > 0
+
+
+def test_plain_drr_with_sla_still_attributes_classes():
+    spec = box.ClusterSpec(
+        num_donors=1, donor_pages=2048, num_clients=1, replication=1,
+        service="drr", sla="standard", **FAST)
+    with box.open(spec) as s:
+        s.engine(0).write(s.donors[0], 0, PAGE).wait(10)
+        s.flush()
+        per_class = s.stats()["nic"][str(s.donors[0])]["service"][
+            "per_class"]
+        assert set(per_class) == {"standard"}
+
+
+def test_registered_custom_sla_class_resolves_like_builtin():
+    @box.register_policy("sla", "gold-test")
+    def gold(**params):
+        return box.SLAClass(name="gold-test", weight=8.0, priority=3,
+                            **params)
+    try:
+        spec = box.ClusterSpec(num_clients=1, sla="gold-test",
+                               sla_classes={"gold-test":
+                                            {"p99_target_us": 750.0}})
+        cls = spec.validate().sla_for_clients()[0]
+        assert (cls.weight, cls.priority, cls.p99_target_us) == \
+            (8.0, 3, 750.0)
+    finally:
+        from repro.box.policies import _REGISTRIES
+        _REGISTRIES["sla"].pop("gold-test", None)

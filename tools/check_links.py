@@ -1,0 +1,106 @@
+"""Fail CI on broken relative links in README.md and docs/*.md.
+
+Checks every markdown link ``[text](target)`` whose target is not an
+absolute URL: the referenced file must exist relative to the page that
+links it, and a ``#fragment`` must match a GitHub-style heading slug in
+the target page (same page when the path part is empty). Stdlib only.
+
+Run from the repository root (CI does)::
+
+    python tools/check_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import Counter
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor algorithm: drop markdown code spans' backticks,
+    lowercase, strip everything but word chars/spaces/hyphens, then turn
+    each space into a hyphen."""
+    text = heading.replace("`", "").lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    """All heading anchors a page exposes (duplicate headings get the
+    ``-1``/``-2`` suffixes GitHub appends)."""
+    seen: Counter = Counter()
+    out = set()
+    in_code = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        out.add(slug if not seen[slug] else f"{slug}-{seen[slug]}")
+        seen[slug] += 1
+    return out
+
+
+def links_of(path: Path):
+    in_code = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check(root: Path) -> list:
+    pages = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    errors = []
+    for page in pages:
+        if not page.exists():
+            errors.append(f"{page.relative_to(root)}: page missing")
+            continue
+        for lineno, target in links_of(page):
+            if target.startswith(EXTERNAL):
+                continue
+            where = f"{page.relative_to(root)}:{lineno}"
+            path_part, _, fragment = target.partition("#")
+            dest = page if not path_part \
+                else (page.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{where}: broken link {target!r} "
+                              f"(no such file)")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in anchors_of(dest):
+                    errors.append(f"{where}: broken anchor {target!r} "
+                                  f"(no heading slugs to {fragment!r} in "
+                                  f"{dest.name})")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for err in errors:
+        print(err, file=sys.stderr)
+    pages = 1 + len(list((root / "docs").glob("*.md")))
+    print(f"checked {pages} pages: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
