@@ -16,9 +16,9 @@ One import gives the whole workflow::
 Layers: a declarative, JSON-round-trippable ``ClusterSpec`` consumed by
 ``open(spec) -> Session``; a ``Session`` facade owning lifecycle and
 handing out typed capabilities (``RemoteHeap``/``RemoteBuffer``,
-``Pager``, ``TensorStore``, ``KVStore``, raw ``engine()``); seven policy
+``Pager``, ``TensorStore``, ``KVStore``, raw ``engine()``); eight policy
 registries (``admission``/``polling``/``batching``/``placement``/
-``service``/``cache``/``sla``) selected by name and extended via
+``service``/``cache``/``mr``/``sla``) selected by name and extended via
 ``register_policy``; a typed error
 hierarchy rooted at ``BoxError``; and a single composed stats tree with
 ``fabric.*`` / ``nic.<node>.*`` / ``client.<i>.box.*`` / ``paging.*``

@@ -1,6 +1,6 @@
 """Pluggable policy registries for the ``repro.box`` surface.
 
-Seven policy kinds cover the engine's decision points; a ``ClusterSpec``
+Eight policy kinds cover the engine's decision points; a ``ClusterSpec``
 selects each by name (plus a parameter dict), so swapping a policy is a
 config change, not rewiring:
 
@@ -25,6 +25,13 @@ config change, not rewiring:
   ``CacheTier``): capacity, promote-after-N-accesses threshold, CLOCK
   eviction. Built-in: ``freq-clock`` (capacity 0 = disabled).
   ``ClusterSpec.donor_cache_pages`` overrides the capacity without
+  replacing the policy.
+* ``mr``         — donor-side registration-on-demand (returns an
+  ``MRConfig``, whose ``build(region)`` makes the per-region
+  ``MRCache``): a bounded LRU map of registered pages, lazy first-touch
+  registration via fault → register → RNR replay, dereg-on-evict.
+  Built-in: ``lru`` (capacity 0 = disabled, every page pre-registered).
+  ``ClusterSpec.registered_pages`` overrides the capacity without
   replacing the policy.
 * ``sla``       — named tenant service levels (returns an ``SLAClass``:
   dispatch weight, backlog priority, optional ``p99_target_us``
@@ -52,10 +59,11 @@ from ..core.nic import ServiceConfig, SLOServiceConfig
 from ..core.paging import StripedPlacement
 from ..core.polling import PollConfig, PollMode
 from ..core.region import CacheConfig
+from ..core.registration import MRConfig
 from .spec import PolicySpec, SLAClass
 
 POLICY_KINDS = ("admission", "polling", "batching", "placement", "service",
-                "cache", "sla")
+                "cache", "mr", "sla")
 
 _REGISTRIES: Dict[str, Dict[str, Callable[..., Any]]] = {
     kind: {} for kind in POLICY_KINDS
@@ -138,6 +146,10 @@ register_policy("service", "slo")(SLOServiceConfig)
 
 # ---- built-in donor-cache policies ------------------------------------------
 register_policy("cache", "freq-clock")(CacheConfig)
+
+
+# ---- built-in MR-cache policies ---------------------------------------------
+register_policy("mr", "lru")(MRConfig)
 
 
 # ---- built-in SLA classes ---------------------------------------------------

@@ -33,6 +33,7 @@ from ..core.descriptors import PAGE_SIZE, RegMode
 from ..core.errors import ClosedError
 from ..core.nic import NICCostModel, ServiceConfig, SLOServiceConfig
 from ..core.region import CacheConfig
+from ..core.registration import MRConfig
 from ..core.paging import DiskTier, RemotePagingSystem
 from ..core.rdmabox import BoxConfig, RDMABox
 from ..fabric import Fabric, FaultPlan, LinkConfig
@@ -153,6 +154,21 @@ class Session:
                     f"{type(cache).__name__} — set its capacity via the "
                     f"policy's own params instead")
             cache = replace(cache, capacity_pages=spec.donor_cache_pages)
+        # donor-side registration-on-demand: the ``mr`` policy supplies
+        # the MRConfig (LRU capacity); the ``registered_pages`` engine
+        # knob overrides its capacity
+        mr = create_policy("mr", spec.mr)
+        if spec.registered_pages is not None:
+            if not isinstance(mr, MRConfig):
+                # a silent no-op would leave the cache sized by the custom
+                # policy while the spec (and stats readers) expect N
+                raise ValueError(
+                    f"registered_pages={spec.registered_pages} only "
+                    f"applies to MRConfig-based mr policies; the "
+                    f"{spec.mr.name!r} policy is a "
+                    f"{type(mr).__name__} — set its capacity via the "
+                    f"policy's own params instead")
+            mr = replace(mr, capacity_pages=spec.registered_pages)
         self.fabric = Fabric(
             cost=cfg.nic_cost, scale=cfg.nic_scale,
             kernel_space=cfg.kernel_space,
@@ -162,7 +178,8 @@ class Session:
             else spec.fault_plan(),
             seed=spec.seed,
             service=service,
-            cache=cache)
+            cache=cache,
+            mr=mr)
         self.directory = self.fabric.directory
         self.clients: List[int] = [spec.client_node + i
                                    for i in range(spec.num_clients)]

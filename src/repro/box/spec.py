@@ -201,6 +201,12 @@ class ClusterSpec:
     # own capacity, which defaults to 0 = disabled); finer knobs
     # (promotion threshold) live on the ``cache`` policy below
     donor_cache_pages: Optional[int] = None
+    # donor-side MR-cache capacity: at most N donor pages are registered
+    # at once, the rest register lazily on first touch (fault → register
+    # → RNR replay) and deregister on LRU eviction. None → the ``mr``
+    # policy's own capacity, which defaults to 0 = disabled (every page
+    # pre-registered, the historical behavior, bit for bit)
+    registered_pages: Optional[int] = None
     # per-client SLA class names — a single name applies to every client,
     # a list gives one class per client (len == num_clients). Names
     # resolve through the ``sla`` policy registry (premium / standard /
@@ -227,9 +233,11 @@ class ClusterSpec:
         default_factory=lambda: PolicySpec("drr"))
     cache: PolicySpec = field(
         default_factory=lambda: PolicySpec("freq-clock"))
+    mr: PolicySpec = field(
+        default_factory=lambda: PolicySpec("lru"))
 
     _POLICY_FIELDS = ("admission", "polling", "batching", "placement",
-                      "service", "cache")
+                      "service", "cache", "mr")
 
     def __post_init__(self) -> None:
         for name in self._POLICY_FIELDS:
@@ -253,6 +261,14 @@ class ClusterSpec:
                 f"and below the donor region ({self.donor_pages} pages) — "
                 f"the fast tier mirrors a small hot subset, it cannot "
                 f"replace the region")
+        if self.registered_pages is not None and not (
+                0 < self.registered_pages <= self.donor_pages):
+            raise ValueError(
+                f"registered_pages={self.registered_pages} must be > 0 "
+                f"and at most the donor region ({self.donor_pages} pages) "
+                f"— a donor must be able to register at least one page, "
+                f"and cannot register more than it donated (use None to "
+                f"disable the MR cache: every page pre-registered)")
         share = self.donor_pages // self.num_clients
         if not 0 <= self.heap_pages <= share:
             raise ValueError(

@@ -34,6 +34,7 @@ from .rdmabox import (
     TransferFuture,
 )
 from .region import CacheConfig, CacheTier, RegionDirectory, RemoteRegion
+from .registration import MRCache, MRConfig, StagingPool
 
 __all__ = [
     "AdmissionController", "AdmissionHook", "CongestionAwareHook",
@@ -49,4 +50,5 @@ __all__ = [
     "BatchFuture", "BatchTransferError",
     "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",
     "CacheConfig", "CacheTier",
+    "MRCache", "MRConfig", "StagingPool",
 ]

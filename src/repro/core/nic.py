@@ -797,6 +797,29 @@ class SimulatedNIC:
         faults = self._fabric.faults
         mult = faults.serve_multiplier(self.node_id, client)
         self.stats.served_wqes.add(len(jobs))
+        # registration-on-demand: with an MR cache attached, every job's
+        # extents are classified BEFORE bytes move. A warm extent costs
+        # nothing extra; a miss is a first-touch fault — the cache
+        # registers the missing pages (charged reg_cost_us on THIS
+        # worker's pacer, like any ingress processing) and the job soft-
+        # fails RNR_RETRY_ERR so the client's bounded RNR retry machinery
+        # replays it against the now-warm (pinned) extent. The faulted
+        # job still pays its WQE + wire charge below — the RNR NAK
+        # consumed those resources.
+        region = self.directory.get(self.node_id)
+        mr = getattr(region, "mr", None) if region is not None else None
+        if mr is not None:
+            reg_us = 0.0
+            for job in jobs:
+                if job.status is not WCStatus.SUCCESS:
+                    continue
+                fault, registered = mr.serve(job.desc)
+                if fault:
+                    job.status = WCStatus.RNR_RETRY_ERR
+                    reg_us += cost.reg_cost_us(registered, self.kernel_space)
+                    self.stats.registrations.add(1)
+            if reg_us:
+                pacer.charge(reg_us * mult)
         statuses, hit_pages, miss_pages = self._move_run(jobs)
         # ingress processing lands on THIS worker's pacer; donor-region
         # bandwidth stays on the shared wire — the honest contention point.
@@ -964,14 +987,18 @@ class SimulatedNIC:
         """Service-plane accounting: per-worker served WQEs/bytes, DRR
         rounds, the two receive-side batching counters (merged runs,
         coalesced acks), per-SLA-class serve counters + latency
-        histograms under ``per_class``, and the hot-page cache tier's
-        counters under ``cache`` (zeroed shape when no tier is attached).
-        Lives under ``nic.<node>.service.*`` in the session stats
-        tree."""
+        histograms under ``per_class``, the hot-page cache tier's
+        counters under ``cache``, and the MR cache's under ``mr`` (both
+        report a zeroed shape when not attached). Lives under
+        ``nic.<node>.service.*`` in the session stats tree."""
+        from .registration import MRCache     # lazy: registration -> nic
         region = self.directory.get(self.node_id)
         tier = region.cache if region is not None else None
         cache = (tier.snapshot() if tier is not None
                  else CacheTier.disabled_snapshot())
+        mrc = getattr(region, "mr", None) if region is not None else None
+        mr = (mrc.snapshot() if mrc is not None
+              else MRCache.disabled_snapshot())
         with self._serve_cv:
             workers = {str(i): {"served_wqes": w[0], "served_bytes": w[1]}
                        for i, w in enumerate(self._served_by_worker)}
@@ -998,4 +1025,5 @@ class SimulatedNIC:
             "coalesced_jobs": self._coalesced_jobs.value,
             "per_class": per_class,
             "cache": cache,
+            "mr": mr,
         }

@@ -49,6 +49,13 @@ class RemoteRegion:
         # cluster enables donor caching); every write path below notifies
         # it under the stripe locks, so it can never serve stale bytes
         self.cache: Optional["CacheTier"] = None
+        # optional MR cache (core.registration.MRCache, attached by the
+        # fabric when the cluster enables registration-on-demand): the
+        # serving NIC consults it before moving bytes — unregistered
+        # pages fault (register + RNR replay) instead of being free.
+        # Duck-typed to keep region <- registration import-free; same
+        # lock-order invariant as the tier: region stripes -> mr lock.
+        self.mr = None
 
     # ---- striped locking -------------------------------------------------
     def _stripes_of(self, page: int, num_pages: int) -> range:

@@ -1,18 +1,46 @@
-"""Memory-region strategies: preMR staging pool vs dynMR (§5.1, Fig. 4).
+"""Memory-region strategies: preMR staging, dynMR curves, and the MR cache.
 
-The *decision* (cost crossover) lives in the NIC cost model and
-``batching.resolve_reg_mode``; this module provides the preMR staging-buffer
-pool itself plus the measured cost curves used by the Fig. 4 benchmark.
+Three pieces live here:
+
+* ``StagingPool`` — pre-allocated, pre-registered MR buffers (the preMR
+  path of §5.1): acquiring copies the payload in (the memcpy the paper
+  prices), releasing returns the slab.
+* ``cost_curves`` — the measured preMR-vs-dynMR cost data behind the
+  Fig. 4 benchmark. The *decision* (cost crossover) lives in the NIC
+  cost model and ``batching.resolve_reg_mode``.
+* ``MRCache`` / ``MRConfig`` — registration-on-demand for the donor
+  side. The engine's historical assumption (every donor page is
+  pre-registered and pinned) caps heap size at registered memory; the
+  MR cache drops it: a bounded LRU map of *registered* pages, populated
+  lazily on first touch. A served job whose pages are all registered is
+  a **hit** and pays zero registration cost; any unregistered page is a
+  **fault** — the serving NIC registers the missing pages under the
+  region stripe locks (charging ``NICCostModel.reg_cost_us``), soft-
+  fails the job RNR-style, and the client's existing bounded RNR retry
+  machinery replays it against the now-warm extent. Eviction
+  deregisters the coldest unpinned page (dereg-on-evict), so residency
+  is bounded while the heap behind it can be arbitrarily large.
+
+Lock order matches the ``CacheTier`` invariant (docs/architecture.md):
+region stripes → mr-cache lock, never the reverse. ``serve`` classifies
+under the cache lock alone; the fault path releases it, takes the
+extent's stripe locks, retakes the cache lock, and re-checks — so a
+racing registration of the same extent downgrades the fault to a hit
+instead of double-charging.
 """
 
 from __future__ import annotations
 
+import collections
 import threading
-from typing import Dict, List, Tuple
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .descriptors import PAGE_SIZE
+from .descriptors import PAGE_SIZE, TransferDescriptor
+from .errors import BoxError
 from .nic import NICCostModel
 
 
@@ -20,22 +48,40 @@ class StagingPool:
     """Pre-allocated, pre-registered MR buffers (the preMR path).
 
     Fixed-size page-granular slabs; acquiring copies the payload in (the
-    memcpy the paper prices), releasing returns the slab.
+    memcpy the paper prices), releasing returns the slab. ``acquire``
+    blocks while every slab is checked out; pass ``timeout`` (real
+    seconds) to fail with ``BoxError`` instead of waiting forever on a
+    leaked pool. ``snapshot`` surfaces the acquire/contention counters.
     """
 
     def __init__(self, slab_pages: int = 64, num_slabs: int = 32) -> None:
         self.slab_pages = slab_pages
+        self.num_slabs = num_slabs
         self._free: List[np.ndarray] = [
             np.zeros(slab_pages * PAGE_SIZE, dtype=np.uint8)
             for _ in range(num_slabs)
         ]
         self._cv = threading.Condition()
+        self._acquires = 0
+        self._waits = 0          # acquires that found no free slab
 
-    def acquire(self, payload: np.ndarray) -> np.ndarray:
+    def acquire(self, payload: np.ndarray,
+                timeout: Optional[float] = None) -> np.ndarray:
         assert payload.nbytes <= self.slab_pages * PAGE_SIZE, "payload exceeds slab"
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
+            self._acquires += 1
+            if not self._free:
+                self._waits += 1
             while not self._free:
-                self._cv.wait()
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise BoxError(
+                        f"StagingPool.acquire timed out after {timeout}s: "
+                        f"all {self.num_slabs} slabs checked out (leaked "
+                        f"slab, or the pool is undersized for the load)")
+                self._cv.wait(remaining)
             slab = self._free.pop()
         view = slab[: payload.nbytes]
         view[...] = payload.reshape(-1).view(np.uint8)
@@ -45,6 +91,12 @@ class StagingPool:
         with self._cv:
             self._free.append(slab)
             self._cv.notify()
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._cv:
+            return {"slabs": self.num_slabs, "slab_pages": self.slab_pages,
+                    "free": len(self._free), "acquires": self._acquires,
+                    "waits": self._waits}
 
 
 def cost_curves(cost: NICCostModel, sizes_kb: List[int]
@@ -57,3 +109,188 @@ def cost_curves(cost: NICCostModel, sizes_kb: List[int]
         out["kernel"].append((kb, pre, cost.reg_cost_us(pages, True)))
         out["user"].append((kb, pre, cost.reg_cost_us(pages, False)))
     return out
+
+
+class MRCache:
+    """Bounded LRU map of *registered* donor pages (registration-on-demand).
+
+    Attached to a ``RemoteRegion`` as ``region.mr`` (by ``MRConfig.build``,
+    via the ``mr`` policy registry); consulted by the serving NIC once
+    per job before any bytes move:
+
+    * **hit** — every page of the job's extents is registered: the pages
+      are touched (LRU freshness), the job proceeds with zero
+      registration cost.
+    * **fault** — at least one page is unregistered: the cache registers
+      every missing page under the extent's region stripe locks (the
+      caller charges ``reg_cost_us`` for exactly those pages), *pins*
+      each request's page range keyed by its ``wr_id``, and reports the
+      fault; the NIC soft-fails the job ``RNR_RETRY_ERR`` and the
+      client's bounded RNR retry machinery replays it. Pinned pages are
+      exempt from eviction until their request replays, so a replay is
+      guaranteed to hit — one fault per first touch, never a fault loop.
+    * **pass** — an extent outside the region is left alone: the region
+      access raises and the job fails ``REMOTE_ERR`` exactly as without
+      a cache (registering unreachable pages, or retrying a permanent
+      error, would be wrong twice over).
+
+    Eviction is LRU over unpinned pages, deregistering the victim
+    (dereg-on-evict). When every resident page is pinned (many faults in
+    flight on a tiny cache), registration transiently overflows
+    ``capacity`` rather than livelocking — residency returns below the
+    bound as replays unpin. A fault whose replay never arrives (client
+    closed, or ``rnr_retry_limit`` exhausted by *other* errors) leaks
+    its pins; that is bounded by failed jobs and accepted.
+
+    Counters (pages unless noted): ``hits``/``misses`` classify served
+    pages; ``faults``/``replays`` count jobs soft-failed / served after
+    a fault; ``registrations``/``deregistrations`` count page map churn.
+    """
+
+    def __init__(self, region, capacity_pages: int) -> None:
+        self.region = region
+        self.capacity = max(1, min(capacity_pages, region.num_pages))
+        self._lru: "collections.OrderedDict[int, None]" = \
+            collections.OrderedDict()
+        self._pin: Dict[int, int] = {}                 # page -> refcount
+        self._faulted: Dict[int, Tuple[int, int]] = {}  # wr_id -> (page, n)
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._faults = 0
+        self._replays = 0
+        self._registrations = 0
+        self._deregistrations = 0
+
+    # ---- serve-path protocol (called by the donor NIC) -------------------
+    def serve(self, desc: TransferDescriptor) -> Tuple[bool, int]:
+        """Consult the cache for one served job. Returns ``(fault,
+        registered_pages)``: ``(False, 0)`` is a hit (or an out-of-range
+        pass), ``(True, n)`` is a fault that registered ``n`` missing
+        pages — the caller charges ``reg_cost_us(n)`` and fails the job
+        ``RNR_RETRY_ERR`` so the client replays it."""
+        ranges = [(r.remote_addr, r.num_pages) for r in desc.requests] \
+            or [(desc.remote_addr, desc.num_pages)]
+        num_region = self.region.num_pages
+        for page, n in ranges:
+            if page < 0 or page + n > num_region:
+                return False, 0     # pass: the region access will raise
+        total = sum(n for _, n in ranges)
+        with self._lock:
+            if not self._missing_locked(ranges):
+                self._hit_locked(desc, ranges, total)
+                return False, 0
+        # fault path: register under the region stripe locks (lock order:
+        # region stripes -> mr lock), re-checking residency under both —
+        # a racing fault of an overlapping extent may have registered it
+        region = self.region
+        stripes = sorted({s for page, n in ranges
+                          for s in region._stripes_of(page, n)})
+        region._acquire(stripes)
+        try:
+            with self._lock:
+                missing = self._missing_locked(ranges)
+                if not missing:
+                    self._hit_locked(desc, ranges, total)
+                    return False, 0
+                for page in missing:
+                    self._register_locked(page)
+                self._misses += total
+                self._faults += 1
+                for r in desc.requests:
+                    if r.wr_id in self._faulted:
+                        continue    # re-fault of a merged replay: pinned
+                    self._faulted[r.wr_id] = (r.remote_addr, r.num_pages)
+                    for k in range(r.num_pages):
+                        p = r.remote_addr + k
+                        self._pin[p] = self._pin.get(p, 0) + 1
+                return True, len(missing)
+        finally:
+            region._release(stripes)
+
+    def _missing_locked(self, ranges) -> List[int]:
+        lru = self._lru
+        return [p for page, n in ranges
+                for p in range(page, page + n) if p not in lru]
+
+    def _hit_locked(self, desc, ranges, total: int) -> None:
+        """Touch a fully-registered extent: LRU freshness, hit pages, and
+        replay resolution (unpin) for requests that faulted earlier."""
+        self._hits += total
+        for page, n in ranges:
+            for p in range(page, page + n):
+                self._lru.move_to_end(p)
+        replayed = False
+        for r in desc.requests:
+            pinned = self._faulted.pop(r.wr_id, None)
+            if pinned is None:
+                continue
+            replayed = True
+            page, n = pinned
+            for k in range(n):
+                p = page + k
+                left = self._pin.get(p, 0) - 1
+                if left > 0:
+                    self._pin[p] = left
+                else:
+                    self._pin.pop(p, None)
+        if replayed:
+            self._replays += 1
+
+    def _register_locked(self, page: int) -> None:
+        while len(self._lru) >= self.capacity:
+            victim = next((p for p in self._lru if p not in self._pin), None)
+            if victim is None:
+                break               # all pinned: transient overflow
+            del self._lru[victim]
+            self._deregistrations += 1
+        self._lru[page] = None
+        self._registrations += 1
+
+    # ---- stats -----------------------------------------------------------
+    @staticmethod
+    def disabled_snapshot() -> Dict[str, object]:
+        """The zeroed shape a donor without an MR cache reports, so stats
+        consumers can address ``service.mr.*`` unconditionally."""
+        return {"capacity_pages": 0, "resident_pages": 0, "pinned_pages": 0,
+                "hits": 0, "misses": 0, "faults": 0, "replays": 0,
+                "registrations": 0, "deregistrations": 0, "hit_rate": 0.0}
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            hits, misses = self._hits, self._misses
+            out = {
+                "capacity_pages": self.capacity,
+                "resident_pages": len(self._lru),
+                "pinned_pages": len(self._pin),
+                "hits": hits,
+                "misses": misses,
+                "faults": self._faults,
+                "replays": self._replays,
+                "registrations": self._registrations,
+                "deregistrations": self._deregistrations,
+            }
+        total = hits + misses
+        out["hit_rate"] = hits / total if total else 0.0
+        return out
+
+
+@dataclass
+class MRConfig:
+    """The ``mr`` policy kind (built-in name: ``lru``).
+
+    ``capacity_pages=0`` (the default) disables the cache entirely —
+    donors serve every page as pre-registered, exactly the pre-MR-cache
+    behavior (and charges). ``ClusterSpec.registered_pages`` overrides
+    the capacity without replacing the policy, mirroring
+    ``donor_cache_pages`` on the cache policy. Custom mr policies
+    registered via ``@register_policy`` must provide
+    ``build(region) -> Optional[MRCache-like]``.
+    """
+
+    capacity_pages: int = 0       # 0 disables the cache
+
+    def build(self, region) -> Optional[MRCache]:
+        if self.capacity_pages <= 0:
+            return None
+        return MRCache(region, self.capacity_pages)

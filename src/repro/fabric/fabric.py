@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 from ..core.nic import NICCostModel, ServiceConfig, SimulatedNIC
 from ..core.region import CacheConfig, RegionDirectory, RemoteRegion
+from ..core.registration import MRConfig
 from .faults import FaultPlan, FaultState
 from .link import DelayLine, Link, LinkConfig
 
@@ -47,6 +48,7 @@ class Fabric:
         seed: int = 0,
         service: Optional[ServiceConfig] = None,
         cache: Optional[CacheConfig] = None,
+        mr: Optional[MRConfig] = None,
     ) -> None:
         self.directory = directory or RegionDirectory()
         self.cost = cost or NICCostModel()
@@ -60,6 +62,9 @@ class Fabric:
         # tier built from it (None / capacity 0 = no tier, serve-from-
         # region exactly as before)
         self.cache = cache
+        # donor-side MR-cache policy (registration-on-demand); None /
+        # capacity 0 = every donor page pre-registered, as before
+        self.mr = mr
         self.seed = seed
         self.origin = time.perf_counter()
         self.delay = DelayLine()
@@ -97,6 +102,8 @@ class Fabric:
             region = RemoteRegion(node_id, donor_pages)
             if self.cache is not None:
                 region.cache = self.cache.build(region)
+            if self.mr is not None:
+                region.mr = self.mr.build(region)
             self.directory.register(region)
         return nic
 
