@@ -1,0 +1,88 @@
+"""Cluster capacity planning through the analytic model backend.
+
+The thread-per-NIC engine answers "what happened" for a handful of
+nodes; this bench asks the question RDMAvisor says datacenter RDMA
+deployment actually poses — where does a 500-client x 64-donor cluster
+saturate, and what does adding donor service workers buy? — and answers
+it through ``box.open(spec, backend="model")``: every grid point is a
+closed-form solve, milliseconds each, ZERO simulator threads.
+
+Grid: 500 clients x 64 donors x {1, 2, 4, 8} service workers under a
+PU-heavy cost model (ingress processing dominates wire time, as in
+bench_donor_scaling). Per point we emit the predicted capacity
+(total ops/s at the first-saturated center), the p99 latency estimate
+at an 80%-of-capacity operating point, and WHICH center saturates
+first.
+
+Self-checks (after yielding rows, so ``run.py --json`` keeps the
+numbers even on a failed bound): the whole sweep completes within a
+wall-clock bound of seconds; predicted saturation moves from the donor
+ingress PU pool (workers 1-2) to donor region bandwidth (workers 8) —
+the analytic reproduction of the worker-scaling knee; capacity is
+monotonically non-decreasing in workers; and the thread count is
+unchanged across the sweep (no threaded engine was instantiated).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+from repro import box
+
+from .common import csv_row
+
+CLIENTS = 500
+DONORS = 64
+WORKER_GRID = (1, 2, 4, 8)
+WALL_BOUND_S = 5.0                  # the WHOLE sweep, not per point
+# ingress-processing-heavy cost model: wqe_proc dominates wire time, so
+# few workers pin the bottleneck on the PU pool; enough workers shift
+# it to region bandwidth
+COST = {"num_pus": 8, "wqe_proc_us": 10.0, "wire_us_per_page": 2.0,
+        "mmio_us": 0.05, "completion_dma_us": 0.1, "reg_kernel_us": 0.05}
+
+
+def main():
+    spec = box.ClusterSpec(
+        num_clients=CLIENTS, num_donors=DONORS, donor_pages=1 << 16,
+        replication=1, serve_workers=1, nic_cost=COST, backend="model")
+    threads_before = threading.active_count()
+    t0 = time.perf_counter()
+    with box.open(spec) as session:
+        rows = session.sweep([{"serve_workers": w} for w in WORKER_GRID])
+    wall = time.perf_counter() - t0
+    threads_after = threading.active_count()
+
+    by_workers = {}
+    for w, r in zip(WORKER_GRID, rows):
+        by_workers[w] = r
+        cls = r["classes"]["default"]
+        yield csv_row(
+            f"capacity/{CLIENTS}x{DONORS}/workers_{w}", cls["p99_us"],
+            f"ops_s={r['capacity_ops_per_s']:.0f};"
+            f"achieved_ops_s_per_client={cls['achieved_ops_per_s']:.0f};"
+            f"bottleneck={r['bottleneck']};"
+            f"saturated={'+'.join(r['saturated']) or 'none'};"
+            f"eval_ms={r['eval_ms']:.2f}")
+    yield csv_row("capacity/sweep_wall", wall * 1e6,
+                  f"points={len(rows)};bound_s={WALL_BOUND_S}")
+
+    # self-checks AFTER yielding rows so the JSON keeps the numbers
+    assert wall < WALL_BOUND_S, (
+        f"analytic sweep of {len(rows)} points took {wall:.1f}s "
+        f"(bound {WALL_BOUND_S}s) — the model backend is not "
+        f"milliseconds-per-point")
+    assert threads_after == threads_before, (
+        f"thread count moved {threads_before} -> {threads_after}: "
+        f"something instantiated the threaded engine")
+    assert by_workers[1]["bottleneck"] == "donor.ingress_pu", by_workers[1]
+    assert by_workers[8]["bottleneck"] == "donor.region_bw", by_workers[8]
+    caps = [by_workers[w]["capacity_ops_per_s"] for w in WORKER_GRID]
+    assert caps == sorted(caps), (
+        f"capacity not monotone in workers: {caps}")
+
+
+if __name__ == "__main__":
+    for line in main():
+        print(line)

@@ -38,6 +38,7 @@ MODULES = [
     "benchmarks.bench_hotcache",         # donor hot-page cache under zipf skew
     "benchmarks.bench_mr_cache",         # registration-on-demand MR cache
     "benchmarks.bench_slo",              # multi-tenant SLO: premium p99 holds
+    "benchmarks.bench_capacity",         # analytic model: 500x64 capacity grid
     "benchmarks.bench_serving",          # Fig. 14
     "benchmarks.bench_paged_attention",  # TPU kernel embodiment
 ]

@@ -1,0 +1,46 @@
+"""Capacity planning with the analytic model backend, in ~40 lines.
+
+Load a ClusterSpec from JSON (or fall back to an inline one), sweep
+donor/worker variants through ``box.open(spec, backend="model")`` —
+milliseconds per topology, zero simulator threads — and print the
+cheapest topology whose premium-tenant p99 estimate meets its target.
+
+  PYTHONPATH=src python examples/capacity_plan.py [spec.json]
+"""
+
+import sys
+
+from repro import box
+
+P99_TARGET_US = 60.0                    # the premium latency contract
+spec = box.ClusterSpec(
+    num_clients=500, donor_pages=1 << 16, replication=1, sla="premium",
+    service="slo", nic_cost={"num_pus": 8, "wqe_proc_us": 10.0,
+                             "wire_us_per_page": 2.0})
+if len(sys.argv) > 1:                   # a saved spec overrides the inline one
+    spec = box.ClusterSpec.from_json(open(sys.argv[1]).read())
+
+# every client offers 8k ops/s; donors cost 4 units each, workers 1
+workload = box.ModelWorkload(client_ops_per_s=8_000.0, read_fraction=0.7)
+grid = [{"num_donors": d, "serve_workers": w}
+        for d in (16, 32, 64) for w in (1, 2, 4, 8)]
+
+with box.open(spec, backend="model", workload=workload) as session:
+    plans = []
+    for variant, row in zip(grid, session.sweep(grid)):
+        p99 = max(c["p99_us"] for c in row["classes"].values())
+        cost = 4 * variant["num_donors"] + variant["serve_workers"]
+        ok = not row["saturated"] and p99 <= P99_TARGET_US
+        plans.append((ok, cost, variant, p99, row["bottleneck"]))
+        mark = "meets " if ok else "misses"
+        print(f"{mark} donors={variant['num_donors']:3d} "
+              f"workers={variant['serve_workers']} cost={cost:4d} "
+              f"p99={p99:8.1f}us bottleneck={row['bottleneck']}")
+
+feasible = sorted(p for p in plans if p[0])
+if not feasible:
+    sys.exit(f"no topology in the grid meets p99 <= {P99_TARGET_US}us")
+_, cost, best, p99, _ = feasible[0]
+print(f"\ncheapest plan meeting the premium p99 target: "
+      f"{best['num_donors']} donors x {best['serve_workers']} workers "
+      f"(cost {cost}, predicted p99 {p99:.1f}us <= {P99_TARGET_US}us)")

@@ -24,6 +24,11 @@ hierarchy rooted at ``BoxError``; and a single composed stats tree with
 ``fabric.*`` / ``nic.<node>.*`` / ``client.<i>.box.*`` / ``paging.*``
 namespaces. The old entrypoints (``MemoryCluster`` et al.) survive as
 deprecation shims over this surface.
+
+``open(spec, backend="model")`` swaps the threaded simulator for the
+closed-form queueing-model evaluator (``ModelSession``; traffic via
+``workload=ModelWorkload(...)``) — same spec, same stats namespaces,
+milliseconds per topology, for capacity planning at cluster scale.
 """
 
 from ..core.descriptors import PAGE_SIZE
@@ -34,6 +39,8 @@ from ..core.rdmabox import (
     TransferError,
     TransferFuture,
 )
+from ..model.session import ModelSession
+from ..model.workload import ModelWorkload
 from .handles import KVStore, Pager, RemoteBuffer, RemoteHeap, TensorStore
 from .policies import create_policy, policy_names, register_policy
 from .session import Session, open_session
@@ -51,6 +58,8 @@ __all__ = [
     "ClosedError",
     "ClusterSpec",
     "KVStore",
+    "ModelSession",
+    "ModelWorkload",
     "PAGE_SIZE",
     "Pager",
     "PolicySpec",

@@ -30,7 +30,7 @@ import numpy as np
 
 from ..core.admission import AdmissionHook, CongestionAwareHook
 from ..core.descriptors import PAGE_SIZE, RegMode
-from ..core.errors import ClosedError
+from ..core.errors import BoxError, ClosedError
 from ..core.nic import NICCostModel, ServiceConfig, SLOServiceConfig
 from ..core.region import CacheConfig
 from ..core.registration import MRConfig
@@ -39,7 +39,7 @@ from ..core.rdmabox import BoxConfig, RDMABox
 from ..fabric import Fabric, FaultPlan, LinkConfig
 from .handles import KVStore, Pager, RemoteHeap, TensorStore
 from .policies import create_policy
-from .spec import ClusterSpec
+from .spec import VALID_BACKENDS, ClusterSpec
 from .stats import flatten_stats
 
 # keyword arguments of open() that are Session escape hatches (imperative
@@ -401,18 +401,56 @@ class Session:
 
 
 def open_session(spec: Union[None, str, Dict[str, Any], ClusterSpec] = None,
-                 **kwargs: Any) -> Session:
-    """Build and start a cluster session from a declarative spec.
+                 **kwargs: Any):
+    """Build a session from a declarative spec, on either backend.
 
     ``spec`` may be a ``ClusterSpec``, a plain dict, a JSON string, or
     None (defaults). Extra keyword arguments override spec fields
     (``open(spec, num_clients=4)``); the ``ESCAPE_HATCHES`` keywords pass
     imperative objects straight to ``Session`` for legacy/advanced use.
+
+    ``spec.backend`` (or ``backend=`` as an override) selects the
+    execution backend: ``"sim"`` starts the threaded simulator and
+    returns a ``Session``; ``"model"`` evaluates the spec analytically
+    and returns a ``ModelSession`` (``workload=`` then describes the
+    offered traffic). Escape hatches carrying imperative objects the
+    analytic backend cannot honor (``fault_plan``, ``box_config``,
+    ``disk``, ``admission_hook_factory``, ``app_handler``) raise
+    ``BoxError`` rather than being silently ignored; ``link_config`` is
+    honored analytically.
+
+    Raises:
+        BoxError: unknown ``backend``, an escape hatch the selected
+            backend cannot honor, or ``workload=`` with the sim backend
+            (the simulator measures traffic, it is not told one).
     """
     hatches = {k: kwargs.pop(k) for k in ESCAPE_HATCHES if k in kwargs}
+    workload = kwargs.pop("workload", None)
     spec = ClusterSpec.coerce(spec)
     if kwargs:
         spec = replace(spec, **kwargs)
+    if spec.backend not in VALID_BACKENDS:
+        raise BoxError(
+            f"unknown backend {spec.backend!r}: valid backends are "
+            f"'sim' (thread-per-NIC simulator) and 'model' (analytic "
+            f"queueing-model evaluator)")
+    if spec.backend == "model":
+        unsupported = sorted(set(hatches) - {"link_config"})
+        if unsupported:
+            raise BoxError(
+                f"escape hatch(es) {unsupported} carry imperative "
+                f"objects the model backend cannot honor — it is a "
+                f"closed-form evaluator with no live engines; open with "
+                f"backend=\"sim\", or express the scenario declaratively "
+                f"(spec.link / spec.write_through_disk / spec.admission)")
+        from ..model.session import ModelSession
+        return ModelSession(spec, workload=workload,
+                            link_config=hatches.get("link_config"))
+    if workload is not None:
+        raise BoxError(
+            "workload= describes offered traffic to the model backend; "
+            "the simulator measures what clients actually submit — drive "
+            "session.engine(i) instead, or open with backend=\"model\"")
     return Session(spec, **hatches)
 
 

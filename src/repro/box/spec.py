@@ -28,6 +28,9 @@ from ..core.descriptors import WCStatus
 from ..fabric.faults import FaultPlan
 from ..fabric.link import LinkConfig
 
+# execution backends ``box.open`` can dispatch a spec to
+VALID_BACKENDS = ("sim", "model")
+
 
 @dataclass
 class PolicySpec:
@@ -220,6 +223,9 @@ class ClusterSpec:
     # fault script (list of event dicts, see fault_plan_from_dicts)
     faults: Optional[List[Dict[str, Any]]] = None
     seed: int = 0
+    # execution backend: "sim" = the thread-per-NIC simulator (default),
+    # "model" = the closed-form queueing-model evaluator (repro.model)
+    backend: str = "sim"
     # policies, by registry name
     admission: PolicySpec = field(
         default_factory=lambda: PolicySpec("static"))
@@ -245,6 +251,10 @@ class ClusterSpec:
 
     # ---- validation --------------------------------------------------------
     def validate(self) -> "ClusterSpec":
+        if self.backend not in VALID_BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}: valid backends are "
+                f"{', '.join(repr(b) for b in VALID_BACKENDS)}")
         if self.num_donors < 1:
             raise ValueError("num_donors must be >= 1")
         if self.num_clients < 1:

@@ -290,6 +290,7 @@ class _DonorJob:
     fwd_complete_v: float         # forward-leg virtual completion stamp
     fwd_delay_real: float         # forward propagation delay (REAL seconds)
     fwd_mult: float = 1.0         # forward-leg congestion/straggler multiplier
+    reg_stall_us: float = 0.0     # MR first-touch registration charge (vus)
 
 
 class SimulatedNIC:
@@ -816,7 +817,9 @@ class SimulatedNIC:
                 fault, registered = mr.serve(job.desc)
                 if fault:
                     job.status = WCStatus.RNR_RETRY_ERR
-                    reg_us += cost.reg_cost_us(registered, self.kernel_space)
+                    stall = cost.reg_cost_us(registered, self.kernel_space)
+                    job.reg_stall_us = stall * mult
+                    reg_us += stall
                     self.stats.registrations.add(1)
             if reg_us:
                 pacer.charge(reg_us * mult)
@@ -867,6 +870,14 @@ class SimulatedNIC:
                 ecn_mult=max(job.fwd_mult, mult))
             if status is not WCStatus.SUCCESS:
                 errors += 1
+                # an MR first-touch fault is a *registration stall*, not
+                # a loss: record the NAK's latency inflated by the
+                # registration charge into the class histogram, so SLO
+                # tenants see the stall in their per-class tail instead
+                # of it vanishing into an unrecorded soft error (the
+                # replayed job records its own warm-path sample later)
+                if job.reg_stall_us > 0.0:
+                    latencies.append(wc.latency_us + job.reg_stall_us)
             else:
                 latencies.append(wc.latency_us)
             deliveries.append((job.cq, wc, job.fwd_delay_real + ack_delay))

@@ -1,0 +1,50 @@
+"""``repro.model`` — the analytic (queueing-model) cluster backend.
+
+The thread-per-NIC simulator answers "what happened"; this package
+answers "what would happen" in closed form: the same ``ClusterSpec``
+is compiled into a graph of service centers — one per resource the
+simulator charges (PUs, wires, links, region bandwidth, disk) — and
+solved with M/G/k queue-delay formulas instead of sleeping threads.
+Select it with ``box.open(spec, backend="model")``; see
+``docs/modeling.md`` for the center graph, composition rules, and the
+calibration methodology that keeps it honest.
+"""
+
+from .calibrate import CalibrationResult, run_calibration
+from .centers import (
+    SATURATION_RHO,
+    Center,
+    CenterDisk,
+    CenterEstimate,
+    CenterLink,
+    CenterPU,
+    CenterRegionBW,
+    CenterWire,
+    erlang_c,
+    make_center,
+)
+from .engine import ClassReport, ModelReport, evaluate
+from .session import ModelSession
+from .workload import ModelWorkload, harmonic, zipf_top_share
+
+__all__ = [
+    "SATURATION_RHO",
+    "CalibrationResult",
+    "Center",
+    "CenterDisk",
+    "CenterEstimate",
+    "CenterLink",
+    "CenterPU",
+    "CenterRegionBW",
+    "CenterWire",
+    "ClassReport",
+    "ModelReport",
+    "ModelSession",
+    "ModelWorkload",
+    "erlang_c",
+    "evaluate",
+    "harmonic",
+    "make_center",
+    "run_calibration",
+    "zipf_top_share",
+]

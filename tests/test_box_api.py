@@ -368,10 +368,11 @@ def test_session_never_warns_deprecation():
 # ---- public-surface guard (CI satellite) ----------------------------------
 EXPECTED_ALL = {
     "AllocError", "BatchFuture", "BatchTransferError", "BoxError",
-    "ClosedError", "ClusterSpec", "KVStore", "PAGE_SIZE", "Pager",
-    "PolicySpec", "RemoteBuffer", "RemoteHeap", "SLAClass", "Session",
-    "TensorStore", "TransferError", "TransferFuture", "create_policy",
-    "flatten_stats", "open", "policy_names", "register_policy",
+    "ClosedError", "ClusterSpec", "KVStore", "ModelSession",
+    "ModelWorkload", "PAGE_SIZE", "Pager", "PolicySpec", "RemoteBuffer",
+    "RemoteHeap", "SLAClass", "Session", "TensorStore", "TransferError",
+    "TransferFuture", "create_policy", "flatten_stats", "open",
+    "policy_names", "register_policy",
 }
 
 

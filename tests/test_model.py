@@ -1,0 +1,256 @@
+"""The analytic queueing-model backend (ISSUE-9).
+
+Covers: the ``backend`` spec field round-trips and validates;
+``box.open`` dispatches to ``ModelSession`` and raises typed errors for
+unknown backends / imperative escape hatches / misplaced ``workload=``;
+the model stats tree reuses the sim's dotted-key namespaces; center
+math (Erlang-C, zipf shares, SLO weighted waits) is sane; predicted
+saturation moves from ingress PU to region bandwidth as workers scale;
+``sweep()`` evaluates grids in milliseconds; and the calibration
+cross-check — analytic throughput and mean latency within ±35% of the
+threaded engine on a 4-client/2-donor/1-worker uniform workload, with
+saturation warnings agreeing with admission-shrink behavior.
+"""
+
+import pytest
+
+from repro import box
+from repro.model import (
+    Center,
+    ModelWorkload,
+    erlang_c,
+    evaluate,
+    harmonic,
+    run_calibration,
+    zipf_top_share,
+)
+
+# one PU-heavy, coarse-grained cost model for every analytic test that
+# wants the donor side to dominate (mirrors bench_donor_scaling)
+PU_HEAVY = {"num_pus": 8, "wqe_proc_us": 10.0, "wire_us_per_page": 2.0,
+            "mmio_us": 0.05, "completion_dma_us": 0.1,
+            "reg_kernel_us": 0.05}
+
+
+def model_spec(**kw):
+    base = dict(num_donors=4, num_clients=16, donor_pages=16384,
+                replication=1, serve_workers=1, nic_cost=dict(PU_HEAVY),
+                backend="model")
+    base.update(kw)
+    return box.ClusterSpec(**base)
+
+
+# ---- spec field + dispatch ------------------------------------------------
+def test_backend_field_round_trips_and_validates():
+    spec = box.ClusterSpec(backend="model")
+    assert box.ClusterSpec.from_json(spec.to_json()).backend == "model"
+    assert box.ClusterSpec().backend == "sim"
+    with pytest.raises(ValueError, match="unknown backend"):
+        box.ClusterSpec(backend="emulator").validate()
+
+
+def test_open_dispatches_on_backend():
+    with box.open(model_spec()) as s:
+        assert isinstance(s, box.ModelSession)
+    # override form, on top of a sim-backend spec
+    with box.open({"num_donors": 2, "replication": 1},
+                  backend="model") as s:
+        assert isinstance(s, box.ModelSession)
+        assert s.spec.num_donors == 2
+
+
+def test_unknown_backend_raises_typed_error_listing_backends():
+    with pytest.raises(box.BoxError, match="'sim'.*'model'"):
+        box.open({}, backend="quantum")
+
+
+def test_model_backend_rejects_imperative_escape_hatches():
+    for hatch in ("fault_plan", "admission_hook_factory", "app_handler",
+                  "box_config", "disk"):
+        with pytest.raises(box.BoxError, match=hatch):
+            box.open(model_spec(), **{hatch: object()})
+
+
+def test_sim_backend_rejects_workload_argument():
+    with pytest.raises(box.BoxError, match="workload"):
+        box.open({}, workload=box.ModelWorkload())
+
+
+def test_imperative_accessors_raise_on_model_session():
+    with box.open(model_spec()) as s:
+        for name in ("engine", "heap", "pager", "tensors", "crash_donor",
+                     "congest_path"):
+            with pytest.raises(box.BoxError, match="model backend"):
+                getattr(s, name)()
+    # closed sessions guard stats like the sim Session does
+    with pytest.raises(box.BoxError, match="closed"):
+        s.stats()
+
+
+def test_declarative_faults_become_a_warning_not_an_error():
+    spec = model_spec(faults=[{"kind": "slow", "node": 2, "factor": 9.0}])
+    with box.open(spec) as s:
+        notes = s.stats()["model"]["warnings"]["notes"]
+        assert any("fault" in n for n in notes), notes
+
+
+# ---- stats-tree namespaces ------------------------------------------------
+def test_stats_reuses_sim_namespaces():
+    wl = ModelWorkload(client_ops_per_s=1000.0)
+    with box.open(model_spec(num_clients=2, num_donors=2, sla="standard"),
+                  workload=wl) as s:
+        st = s.stats()
+        donor = str(s.donors[0])
+        svc = st["nic"][donor]["service"]
+        assert svc["serve_workers"] == 1
+        lat = svc["per_class"]["standard"]["latency"]
+        # histogram-shaped leaves: estimates carry count=0
+        assert set(lat) == {"count", "mean_us", "p50_us", "p99_us",
+                            "p999_us", "max_us"}
+        assert lat["count"] == 0
+        assert 0 < lat["p50_us"] <= lat["p99_us"] <= lat["p999_us"]
+        box_lat = st["client"]["0"]["box"]["latency"]
+        assert box_lat["p99_us"] == lat["p99_us"]
+        assert st["client"]["0"]["box"]["sla_class"] == "standard"
+        flat = s.stats(flat=True)
+        assert flat[f"nic.{donor}.service.per_class.standard.latency."
+                    "p99_us"] > 0
+        assert flat["client.1.box.latency.mean_us"] > 0
+        assert flat["model.bottleneck"]
+        assert flat["model.capacity_ops_per_s"] > 0
+        assert any(k.startswith("model.centers.donor.ingress_pu.")
+                   for k in flat)
+
+
+# ---- center math ----------------------------------------------------------
+def test_erlang_c_limits():
+    assert erlang_c(1, 0.0) == 0.0
+    # M/M/1: P(wait) == rho
+    assert erlang_c(1, 0.6) == pytest.approx(0.6)
+    # pooling lowers the delay probability at the same per-server rho
+    assert erlang_c(8, 8 * 0.6) < erlang_c(2, 2 * 0.6) < 0.6
+
+
+def test_harmonic_matches_brute_force_above_cutoff():
+    for s in (0.0, 0.7, 1.0, 1.3):
+        brute = sum(k ** -s for k in range(1, 20_001))
+        assert harmonic(20_000, s) == pytest.approx(brute, rel=1e-6)
+
+
+def test_zipf_top_share_sanity():
+    assert zipf_top_share(1000, 100, 0.0) == pytest.approx(0.1)
+    assert zipf_top_share(1000, 1000, 1.2) == pytest.approx(1.0)
+    assert zipf_top_share(0, 10, 1.0) == 0.0
+    # skew concentrates traffic on the top; share grows with skew
+    uniform = zipf_top_share(1 << 20, 1 << 10, 0.0)
+    skewed = zipf_top_share(1 << 20, 1 << 10, 1.1)
+    assert skewed > 10 * uniform
+
+
+def test_slo_weights_redistribute_waits_conserving_total():
+    c = Center(name="x", servers=1)
+    c.add_visits("premium", 0.004, 100.0, weight=4.0)
+    c.add_visits("best_effort", 0.004, 100.0, weight=1.0)
+    c.solve()
+    wp, wb = c.wait_us("premium"), c.wait_us("best_effort")
+    assert 0 < wp < wb
+    base = c.solve().queue_us
+    total_rate = 0.008
+    assert 0.004 * wp + 0.004 * wb == pytest.approx(total_rate * base)
+
+
+def test_cache_hit_rate_feeds_region_bandwidth():
+    hot = model_spec(donor_cache_pages=1024)
+    wl = ModelWorkload(read_fraction=1.0, zipf_s=1.1,
+                       working_set_pages=16384)
+    hit = evaluate(hot, wl)
+    miss = evaluate(model_spec(), wl)
+    assert hit.cache_hit_rate > 0.5
+    assert miss.cache_hit_rate == 0.0
+    # hits bypass region bandwidth: same offered rate, lower utilization
+    rate = hit.workload.client_ops_per_s
+    miss_at_same = evaluate(model_spec(), wl.with_rate(rate))
+    assert (hit.centers["donor.region_bw"].utilization
+            < miss_at_same.centers["donor.region_bw"].utilization)
+
+
+def test_mr_faults_inflate_mean_and_tail():
+    wl = ModelWorkload(client_ops_per_s=1000.0, zipf_s=0.0,
+                       working_set_pages=16384)
+    cold = evaluate(model_spec(registered_pages=64), wl)
+    warm = evaluate(model_spec(), wl)
+    cls_cold = cold.classes["default"]
+    cls_warm = warm.classes["default"]
+    assert cls_cold.mr_fault_rate > 0.9
+    assert cls_warm.mr_fault_rate == 0.0
+    assert cls_cold.mean_us > cls_warm.mean_us
+    assert cls_cold.p99_us > cls_warm.p99_us
+
+
+# ---- saturation + bottleneck movement -------------------------------------
+def test_overload_warns_saturated_and_stays_finite():
+    rep = evaluate(model_spec(), ModelWorkload(client_ops_per_s=10e6))
+    assert rep.saturated
+    assert rep.bottleneck in rep.warnings["saturated"]
+    cls = rep.classes["default"]
+    assert cls.achieved_ops_per_s < cls.offered_ops_per_s
+    for est in rep.centers.values():
+        assert est.queue_us < float("inf")
+
+
+def test_default_operating_point_is_below_saturation():
+    rep = evaluate(model_spec(), ModelWorkload(target_utilization=0.8))
+    assert not rep.saturated
+    rhos = [e.utilization for e in rep.centers.values()]
+    assert max(rhos) == pytest.approx(0.8, rel=1e-6)
+
+
+def test_bottleneck_moves_from_ingress_pu_to_region_bw_with_workers():
+    spec = model_spec(num_clients=500, num_donors=64, donor_pages=1 << 16)
+    bottlenecks = {}
+    for w in (1, 2, 4, 8):
+        rep = evaluate(box.ClusterSpec(**{**spec.to_dict(),
+                                          "serve_workers": w}))
+        bottlenecks[w] = rep.bottleneck
+    assert bottlenecks[1] == "donor.ingress_pu"
+    assert bottlenecks[8] == "donor.region_bw"
+
+
+# ---- sweep ----------------------------------------------------------------
+def test_sweep_returns_per_variant_summaries_fast():
+    with box.open(model_spec()) as s:
+        rows = s.sweep([{"serve_workers": w} for w in (1, 2, 4, 8)])
+        assert len(rows) == 4
+        caps = [r["capacity_ops_per_s"] for r in rows]
+        assert caps == sorted(caps) and caps[-1] > caps[0]
+        assert all(r["eval_ms"] < 100.0 for r in rows)
+        assert {r["bottleneck"] for r in rows} >= {"donor.ingress_pu"}
+        for r in rows:
+            assert "p99_us" in r["classes"]["default"]
+
+
+# ---- calibration cross-check (satellite) ----------------------------------
+def test_calibration_matches_threaded_engine_within_band():
+    """4 clients / 2 donors / 1 worker, deterministic uniform paced
+    writes at ~40% donor utilization: analytic throughput and mean
+    latency within ±35% of the measured engine, and the model flags NO
+    saturation exactly as the measured engine shows no admission
+    shrink. Costs are large and the clock coarse so pacer charges
+    actually sleep — see ``repro.model.calibrate``."""
+    spec = box.ClusterSpec(
+        num_donors=2, num_clients=4, donor_pages=4096, replication=1,
+        serve_workers=1, nic_scale=4e-6, admission="congestion",
+        nic_cost={"wqe_proc_us": 400.0, "wire_us_per_page": 5.0,
+                  "mmio_us": 0.3, "completion_dma_us": 0.5,
+                  "reg_kernel_us": 0.12, "dma_read_us": 0.5})
+    wl = ModelWorkload(client_ops_per_s=500.0, read_fraction=0.0,
+                       pages_per_op=1)
+    result = run_calibration(spec, wl, ops_per_client=48)
+    assert result.within(0.35), result.agreement()
+    assert not result.model_saturated, result.agreement()
+    assert result.measured_shrinks == 0, result.agreement()
+
+
+def test_calibration_requires_an_explicit_rate():
+    with pytest.raises(ValueError, match="client_ops_per_s"):
+        run_calibration(box.ClusterSpec(), ModelWorkload())

@@ -273,6 +273,44 @@ def test_disabled_path_is_untouched():
         assert s.stats()["client"]["0"]["box"]["rnr_retries"] == 0
 
 
+def test_registration_stalls_visible_in_per_class_latency():
+    """A first-touch fault is a registration *stall*, not a loss: the
+    faulted NAK records its ``reg_cost_us``-inflated latency into
+    ``nic.<n>.service.per_class.<class>.latency``, so a fault-heavy SLO
+    tenant's p99 visibly exceeds a warm-path tenant's p99 instead of
+    the stall vanishing into an unrecorded soft error."""
+    # at nic_scale=2e-8 real scheduling noise shows up as thousands of
+    # virtual us per op — the stall must dominate it, not tie with it
+    reg_us = 500_000.0
+    spec = box.ClusterSpec(
+        num_donors=1, donor_pages=1024, num_clients=2, replication=1,
+        nic_scale=2e-8, registered_pages=4,
+        nic_cost={"reg_kernel_us": reg_us},
+        sla=["premium", "best_effort"])
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        warm, cold = s.engine(0), s.engine(1)
+        data = page(3)
+        # premium: one page, faults once, then 200 warm samples drown
+        # that single stall well below its p99
+        for _ in range(200):
+            warm.write(donor, 0, data).wait(30)
+        # best-effort: a new page every op on a 4-page cache — every op
+        # is a first-touch fault + replay
+        for p in range(40):
+            cold.write(donor, 512 + p, data).wait(30)
+        per_class = s.stats()["nic"][str(donor)]["service"]["per_class"]
+        warm_lat = per_class["premium"]["latency"]
+        cold_lat = per_class["best_effort"]["latency"]
+    # every fault contributed an inflated sample on top of its replay
+    assert cold_lat["count"] >= 80, cold_lat
+    assert cold_lat["p99_us"] >= reg_us, \
+        f"registration stalls invisible in the class tail: {cold_lat}"
+    assert warm_lat["p99_us"] < reg_us / 5, \
+        f"warm-path p99 polluted by its single first-touch: {warm_lat}"
+    assert cold_lat["p99_us"] > 5 * warm_lat["p99_us"]
+
+
 # ---------------------------------------------------------------------------
 # LRU eviction / pinning (deterministic, unit level)
 # ---------------------------------------------------------------------------
