@@ -8,7 +8,7 @@ Prints ``name,us_per_call,derived`` CSV. Run:
 benchmarks that honor it size their workloads through
 ``common.sized(full, quick)`` (bench_hotpath, bench_faults,
 bench_multiclient, bench_donor_scaling, bench_hotcache, bench_mr_cache,
-bench_slo) and
+bench_mr_prefetch, bench_slo) and
 shrink for CI smoke runs. ``--json`` additionally writes the rows as a
 JSON document (the artifact CI uploads per PR for the perf trajectory);
 modules yield their rows BEFORE running self-check assertions, so a
@@ -37,6 +37,7 @@ MODULES = [
     "benchmarks.bench_donor_scaling",    # donor service plane: workers scaling
     "benchmarks.bench_hotcache",         # donor hot-page cache under zipf skew
     "benchmarks.bench_mr_cache",         # registration-on-demand MR cache
+    "benchmarks.bench_mr_prefetch",      # predictive MR prefetch + slru
     "benchmarks.bench_slo",              # multi-tenant SLO: premium p99 holds
     "benchmarks.bench_capacity",         # analytic model: 500x64 capacity grid
     "benchmarks.bench_serving",          # Fig. 14

@@ -28,11 +28,18 @@ config change, not rewiring:
   replacing the policy.
 * ``mr``         — donor-side registration-on-demand (returns an
   ``MRConfig``, whose ``build(region)`` makes the per-region
-  ``MRCache``): a bounded LRU map of registered pages, lazy first-touch
+  ``MRCache``): a bounded map of registered pages, lazy first-touch
   registration via fault → register → RNR replay, dereg-on-evict.
-  Built-in: ``lru`` (capacity 0 = disabled, every page pre-registered).
-  ``ClusterSpec.registered_pages`` overrides the capacity without
-  replacing the policy.
+  Built-ins: ``lru`` (plain LRU; capacity 0 = disabled, every page
+  pre-registered), ``slru`` (segmented LRU — probation/protected with a
+  ``protected_fraction`` knob, so single-touch scans can't flush the
+  hot set), ``freq-extent`` (frequency-aware whole-extent victims —
+  pages registered together evict together). Every built-in accepts the
+  ``prefetch_depth``/``prefetch_degree``/``prefetch_confidence`` knobs
+  of the stride-stream prefetcher (depth 0 = prediction off).
+  ``ClusterSpec.registered_pages`` overrides the capacity and
+  ``ClusterSpec.mr_prefetch`` the prefetch knobs without replacing the
+  policy.
 * ``sla``       — named tenant service levels (returns an ``SLAClass``:
   dispatch weight, backlog priority, optional ``p99_target_us``
   contract, admission protection). Built-ins: ``premium``,
@@ -59,7 +66,7 @@ from ..core.nic import ServiceConfig, SLOServiceConfig
 from ..core.paging import StripedPlacement
 from ..core.polling import PollConfig, PollMode
 from ..core.region import CacheConfig
-from ..core.registration import MRConfig
+from ..core.registration import FreqExtentConfig, MRConfig, SLRUConfig
 from .spec import PolicySpec, SLAClass
 
 POLICY_KINDS = ("admission", "polling", "batching", "placement", "service",
@@ -150,6 +157,8 @@ register_policy("cache", "freq-clock")(CacheConfig)
 
 # ---- built-in MR-cache policies ---------------------------------------------
 register_policy("mr", "lru")(MRConfig)
+register_policy("mr", "slru")(SLRUConfig)
+register_policy("mr", "freq-extent")(FreqExtentConfig)
 
 
 # ---- built-in SLA classes ---------------------------------------------------

@@ -86,6 +86,7 @@ class Session:
                 app_handler=app_handler,
                 rnr_retry_limit=spec.rnr_retry_limit,
                 rnr_backoff_us=spec.rnr_backoff_us,
+                rnr_jitter_seed=spec.rnr_jitter_seed,
             )
         else:
             if spec.num_clients > 1 and cfg.admission_hook is not None \
@@ -169,6 +170,23 @@ class Session:
                     f"{type(mr).__name__} — set its capacity via the "
                     f"policy's own params instead")
             mr = replace(mr, capacity_pages=spec.registered_pages)
+        if spec.mr_prefetch is not None:
+            if not isinstance(mr, MRConfig):
+                # a silent no-op would leave prediction configured by the
+                # custom policy while the spec (and stats readers) expect
+                # these knobs
+                raise ValueError(
+                    f"mr_prefetch={spec.mr_prefetch} only applies to "
+                    f"MRConfig-based mr policies; the {spec.mr.name!r} "
+                    f"policy is a {type(mr).__name__} — set its prefetch "
+                    f"knobs via the policy's own params instead")
+            pf = spec.mr_prefetch
+            mr = replace(
+                mr,
+                prefetch_depth=int(pf.get("depth", mr.prefetch_depth)),
+                prefetch_degree=int(pf.get("degree", mr.prefetch_degree)),
+                prefetch_confidence=int(pf.get("confidence",
+                                               mr.prefetch_confidence)))
         self.fabric = Fabric(
             cost=cfg.nic_cost, scale=cfg.nic_scale,
             kernel_space=cfg.kernel_space,

@@ -210,6 +210,15 @@ class ClusterSpec:
     # policy's own capacity, which defaults to 0 = disabled (every page
     # pre-registered, the historical behavior, bit for bit)
     registered_pages: Optional[int] = None
+    # predictive MR prefetch overrides on the ``mr`` policy: a dict with
+    # any of ``depth`` (lookahead in strides; 0 disables prediction),
+    # ``degree`` (predicted extents per trigger), ``confidence``
+    # (repeated strides before predicting). None → the policy's own
+    # knobs, which default to prediction off (PR 8 charges, bit for bit)
+    mr_prefetch: Optional[Dict[str, int]] = None
+    # decorrelated jitter on the client RNR replay backoff (see
+    # BoxConfig.rnr_jitter_seed); None keeps deterministic doubling
+    rnr_jitter_seed: Optional[int] = None
     # per-client SLA class names — a single name applies to every client,
     # a list gives one class per client (len == num_clients). Names
     # resolve through the ``sla`` policy registry (premium / standard /
@@ -279,6 +288,20 @@ class ClusterSpec:
                 f"— a donor must be able to register at least one page, "
                 f"and cannot register more than it donated (use None to "
                 f"disable the MR cache: every page pre-registered)")
+        if self.mr_prefetch is not None:
+            unknown = set(self.mr_prefetch) - {"depth", "degree",
+                                               "confidence"}
+            if unknown:
+                raise ValueError(
+                    f"unknown mr_prefetch keys: {sorted(unknown)} "
+                    f"(valid: depth, degree, confidence)")
+            if int(self.mr_prefetch.get("depth", 0)) < 0:
+                raise ValueError("mr_prefetch depth must be >= 0 "
+                                 "(0 disables prediction)")
+            if int(self.mr_prefetch.get("degree", 1)) < 1:
+                raise ValueError("mr_prefetch degree must be >= 1")
+            if int(self.mr_prefetch.get("confidence", 1)) < 1:
+                raise ValueError("mr_prefetch confidence must be >= 1")
         share = self.donor_pages // self.num_clients
         if not 0 <= self.heap_pages <= share:
             raise ValueError(

@@ -34,7 +34,16 @@ from .rdmabox import (
     TransferFuture,
 )
 from .region import CacheConfig, CacheTier, RegionDirectory, RemoteRegion
-from .registration import MRCache, MRConfig, StagingPool
+from .registration import (
+    ExtentPrefetcher,
+    FreqExtentConfig,
+    FreqExtentMRCache,
+    MRCache,
+    MRConfig,
+    SLRUConfig,
+    SLRUMRCache,
+    StagingPool,
+)
 
 __all__ = [
     "AdmissionController", "AdmissionHook", "CongestionAwareHook",
@@ -50,5 +59,6 @@ __all__ = [
     "BatchFuture", "BatchTransferError",
     "TransferError", "TransferFuture", "RegionDirectory", "RemoteRegion",
     "CacheConfig", "CacheTier",
-    "MRCache", "MRConfig", "StagingPool",
+    "ExtentPrefetcher", "FreqExtentConfig", "FreqExtentMRCache",
+    "MRCache", "MRConfig", "SLRUConfig", "SLRUMRCache", "StagingPool",
 ]

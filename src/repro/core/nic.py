@@ -361,6 +361,14 @@ class SimulatedNIC:
         self._class_served: Dict[str, List[int]] = {}
         self._class_hist: Dict[str, LatencyHistogram] = {}
         self._serve_threads: List[threading.Thread] = []
+        # predictive-MR background prefetch: candidate extents emitted by
+        # the MR cache's stride predictor (drained after each served
+        # run), picked up ONLY by workers with no dispatchable foreground
+        # run. A bounded hint queue — a dropped hint is just a prefetch
+        # that never happens, never an error.
+        self._prefetch_queue: Deque[Tuple[int, int]] = \
+            collections.deque(maxlen=1024)
+        self._prefetch_bg_us = 0.0      # background reg time (class lock)
 
     def _ensure_started(self) -> None:
         """PU worker threads spawn on first post — a fabric full of idle
@@ -671,7 +679,8 @@ class SimulatedNIC:
         pacer = self._pu_pacers[wid % self.cost.num_pus]
         while True:
             with self._serve_cv:
-                while self._running and not self._dispatchable_locked():
+                while self._running and not self._dispatchable_locked() \
+                        and not self._prefetch_queue:
                     self._serve_cv.wait(timeout=0.1)
                 if not self._running:
                     # fail whatever is still queued — never drop silently
@@ -683,7 +692,16 @@ class SimulatedNIC:
                         q.clear()
                 else:
                     leftover = None
-                    run = self._next_run_locked(wid)
+                    # foreground ALWAYS first: background prefetch is
+                    # taken only when no foreground run is dispatchable,
+                    # so prediction can never steal service capacity
+                    # from SLO tenants. (_next_run_locked has deficit
+                    # side effects — don't call it unless dispatchable.)
+                    run = (self._next_run_locked(wid)
+                           if self._dispatchable_locked() else [])
+                    prefetch = (self._prefetch_queue.popleft()
+                                if not run and self._prefetch_queue
+                                else None)
             if leftover is not None:
                 for j in leftover:
                     self._fail_job(j)
@@ -698,6 +716,38 @@ class SimulatedNIC:
                         # the client may have more queued jobs that only
                         # this completion made dispatchable
                         self._serve_cv.notify_all()
+            elif prefetch is not None:
+                self._prefetch_extent(pacer, prefetch)
+
+    def _queue_prefetch(self, extents: List[Tuple[int, int]]) -> None:
+        """Queue predicted extents for background registration and wake
+        idle workers (foreground-first: a worker only takes one of these
+        when no foreground run is dispatchable)."""
+        with self._serve_cv:
+            if not self._running:
+                return
+            self._prefetch_queue.extend(extents)
+            self._serve_cv.notify_all()
+
+    def _prefetch_extent(self, pacer: Pacer, extent: Tuple[int, int]) -> None:
+        """Register one predicted extent in the background: the reg cost
+        lands on THIS worker's PU pacer like any ingress work, but only
+        idle workers run it — prediction turns a would-be critical-path
+        fault into a warm hit without stealing service capacity."""
+        region = self.directory.get(self.node_id)
+        mrc = getattr(region, "mr", None) if region is not None else None
+        reg = getattr(mrc, "prefetch_register", None)
+        if reg is None:
+            return              # cache detached since the hint was queued
+        page, n = extent
+        registered = reg(page, n)
+        if not registered:
+            return              # a demand fault (or prefetch) won the race
+        bg_us = self.cost.reg_cost_us(registered, self.kernel_space)
+        pacer.charge(bg_us)
+        self.stats.registrations.add(1)
+        with self._class_lock:
+            self._prefetch_bg_us += bg_us
 
     def _dispatchable_locked(self) -> bool:
         """Worker wake-up predicate (lock held): some non-busy client's
@@ -814,7 +864,7 @@ class SimulatedNIC:
             for job in jobs:
                 if job.status is not WCStatus.SUCCESS:
                     continue
-                fault, registered = mr.serve(job.desc)
+                fault, registered = mr.serve(job.desc, client=client)
                 if fault:
                     job.status = WCStatus.RNR_RETRY_ERR
                     stall = cost.reg_cost_us(registered, self.kernel_space)
@@ -823,6 +873,14 @@ class SimulatedNIC:
                     self.stats.registrations.add(1)
             if reg_us:
                 pacer.charge(reg_us * mult)
+            # predicted extents from this run's stride observations go to
+            # the background queue — idle workers register them so the
+            # demand stream hits instead of faulting
+            drain = getattr(mr, "drain_predictions", None)
+            if drain is not None:
+                cands = drain()
+                if cands:
+                    self._queue_prefetch(cands)
         statuses, hit_pages, miss_pages = self._move_run(jobs)
         # ingress processing lands on THIS worker's pacer; donor-region
         # bandwidth stays on the shared wire — the honest contention point.
@@ -1018,6 +1076,15 @@ class SimulatedNIC:
             rounds = self._serve_rounds
             merged_runs = self._merged_runs
             merged_jobs = self._merged_jobs
+            pf_queued = len(self._prefetch_queue)
+        # queued/bg_pu_us are NIC-side facts the cache can't know — fill
+        # them into the cache's prefetch block (zeros stay zeros when
+        # prefetch is off, keeping the disabled shape bit-identical)
+        pf = mr.get("prefetch")
+        if isinstance(pf, dict):
+            with self._class_lock:
+                pf["queued"] = pf_queued
+                pf["bg_pu_us"] = self._prefetch_bg_us
         with self._class_lock:
             per_class = {
                 name: {"ops": acc[0], "bytes": acc[1],

@@ -23,6 +23,7 @@ the poll batch instead of paying per completion.
 from __future__ import annotations
 
 import logging
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -241,6 +242,12 @@ class BoxConfig:
     # this many times before the error surfaces to the caller / paging
     rnr_retry_limit: int = 3
     rnr_backoff_us: float = 200.0               # virtual us, doubles per try
+    # decorrelated jitter on the RNR replay backoff: clients that fault
+    # together otherwise replay in deterministic lockstep, re-colliding
+    # their NAK bursts at the donor. None (default) keeps the historical
+    # deterministic doubling bit-exact; an int seeds the jitter RNG so
+    # runs stay reproducible.
+    rnr_jitter_seed: Optional[int] = None
 
 
 class RDMABox:
@@ -295,6 +302,11 @@ class RDMABox:
         self._pending_cv = threading.Condition()
         self._retries: Dict[int, int] = {}      # wr_id -> RNR attempts so far
         self._retries_lock = threading.Lock()
+        # decorrelated-jitter state: wr_id -> previous backoff delay (us);
+        # only populated when cfg.rnr_jitter_seed is set
+        self._retry_delay_us: Dict[int, float] = {}
+        self._rnr_rng = (random.Random(self.cfg.rnr_jitter_seed)
+                         if self.cfg.rnr_jitter_seed is not None else None)
         self.rnr_retries = AtomicCounter()
         self.callback_errors = AtomicCounter()
         # post→completion virtual latency of every successful transfer —
@@ -576,6 +588,7 @@ class RDMABox:
             with self._retries_lock:
                 for _, r in work:
                     self._retries.pop(r.wr_id, None)
+                    self._retry_delay_us.pop(r.wr_id, None)
         popped = 0
         for (wc, r), fut in zip(work, futs):
             # callback BEFORE the future resolves: a thread released by
@@ -631,12 +644,31 @@ class RDMABox:
                     retried.append((r, attempt + 1))
         for r, attempt in retried:
             self.rnr_retries.add()
-            delay = (self.cfg.rnr_backoff_us * self.cfg.nic_scale
-                     * (2 ** (attempt - 1)))
+            delay = self._rnr_delay_us(r.wr_id, attempt) * self.cfg.nic_scale
             timer = threading.Timer(delay, self._resubmit, args=(r,))
             timer.daemon = True
             timer.start()
         return {r.wr_id for r, _ in retried}
+
+    def _rnr_delay_us(self, wr_id: int, attempt: int) -> float:
+        """Backoff (virtual us) before replaying an RNR-NAK'd request.
+
+        Default: deterministic doubling of ``rnr_backoff_us`` — the
+        historical behavior, kept bit-exact. With ``rnr_jitter_seed``
+        set, decorrelated jitter: ``min(cap, uniform(base, 3 * prev))``,
+        capped at what deterministic doubling would reach on the final
+        allowed attempt — co-faulting clients spread their replays
+        instead of re-colliding at the donor in lockstep.
+        """
+        base = self.cfg.rnr_backoff_us
+        if self._rnr_rng is None:
+            return base * (2 ** (attempt - 1))
+        cap = base * (2 ** max(0, self.cfg.rnr_retry_limit - 1))
+        with self._retries_lock:
+            prev = self._retry_delay_us.get(wr_id, base)
+            delay = min(cap, self._rnr_rng.uniform(base, prev * 3.0))
+            self._retry_delay_us[wr_id] = delay
+        return delay
 
     def _resubmit(self, wr: WorkRequest) -> None:
         if self._closed:

@@ -96,6 +96,7 @@ class ModelReport:
     bottleneck: str                      # first-saturated center name
     cache_hit_rate: float                # READ-WQE hot-tier hit estimate
     mr_hit_rate: float                   # warm-extent estimate
+    mr_prefetch_coverage: float = 0.0    # fault fraction absorbed in bg
     workload: ModelWorkload = None
     eval_ms: float = 0.0
 
@@ -132,9 +133,10 @@ def _resolved_premr(cost: NICCostModel, spec, pages: int) -> bool:
     return pages < cost.crossover_pages()
 
 
-def _spec_policies(spec) -> Tuple[ServiceConfig, int, int]:
-    """(service policy, cache pages, mr pages) with the spec's engine
-    knobs applied — the same resolution ``Session.__init__`` performs."""
+def _spec_policies(spec) -> Tuple[ServiceConfig, int, int, int]:
+    """(service policy, cache pages, mr pages, prefetch depth) with the
+    spec's engine knobs applied — the same resolution
+    ``Session.__init__`` performs."""
     from ..box.policies import create_policy
     service = create_policy("service", spec.service)
     if not isinstance(service, ServiceConfig):
@@ -146,11 +148,14 @@ def _spec_policies(spec) -> Tuple[ServiceConfig, int, int]:
     if cache_pages is None:
         cache = create_policy("cache", spec.cache)
         cache_pages = getattr(cache, "capacity_pages", 0) or 0
+    mr = create_policy("mr", spec.mr)
     mr_pages = spec.registered_pages
     if mr_pages is None:
-        mr = create_policy("mr", spec.mr)
         mr_pages = getattr(mr, "capacity_pages", 0) or 0
-    return service, cache_pages, mr_pages
+    prefetch_depth = getattr(mr, "prefetch_depth", 0) or 0
+    if spec.mr_prefetch is not None:
+        prefetch_depth = int(spec.mr_prefetch.get("depth", prefetch_depth))
+    return service, cache_pages, mr_pages, prefetch_depth
 
 
 def evaluate(spec, workload: Optional[ModelWorkload] = None,
@@ -176,9 +181,10 @@ def evaluate(spec, workload: Optional[ModelWorkload] = None,
     return report
 
 
-def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
+def _evaluate_at(spec, wl: ModelWorkload, link_config,
+                 extra_wire_us: float = 0.0) -> ModelReport:
     cost = NICCostModel(**(spec.nic_cost or {}))
-    service, cache_pages, mr_pages = _spec_policies(spec)
+    service, cache_pages, mr_pages, prefetch_depth = _spec_policies(spec)
     workers = min(service.num_workers(cost.num_pus), cost.num_pus)
     link = link_config if link_config is not None else spec.link_config()
     link_latency_us = link.latency_us if link is not None else 1.0
@@ -212,7 +218,12 @@ def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
     # faults, registers, and replays (one extra pass over the path)
     mr_share = (zipf_top_share(working_set, mr_pages, wl.zipf_s) ** pages
                 if mr_pages else 1.0)
-    fault = (1.0 - mr_share) if mr_pages else 0.0
+    fault_raw = (1.0 - mr_share) if mr_pages else 0.0
+    # stride prefetch: the covered traffic fraction's faults become
+    # background registrations — off the critical path, still PU load
+    coverage = (wl.stride_fraction
+                if (mr_pages and prefetch_depth > 0) else 0.0)
+    fault = fault_raw * (1.0 - coverage)
     # donor-side visit multiplier: paging-style writes land on
     # ``replication`` donors; reads on one
     donor_visits = rf + (1.0 - rf) * (spec.replication
@@ -276,7 +287,7 @@ def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
         path.add(cpu, cpu_us)
         # client egress wire: payload pages serialize
         cwire = center(f"client.{cls}.wire", CenterWire, count=n)
-        wire_us = pages * cost.wire_us_per_page
+        wire_us = pages * cost.wire_us_per_page + extra_wire_us
         cwire.add_visits(cls, lam, wire_us, weight=w)
         path.add(cwire, wire_us)
         # data link: per-path bandwidth cap + pure propagation
@@ -296,6 +307,13 @@ def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
         if fault:
             dpu.add_visits(
                 cls, n * wqe_rate * donor_visits * fault / spec.num_donors,
+                cost.reg_cost_us(wqe_pages, spec.kernel_space), weight=w)
+        if fault_raw and coverage:
+            # covered faults: registration still burns donor PU time
+            # (the idle-worker prefetch jobs) but never stalls a request
+            dpu.add_visits(
+                cls, n * wqe_rate * donor_visits * fault_raw * coverage
+                / spec.num_donors,
                 cost.reg_cost_us(wqe_pages, spec.kernel_space), weight=w)
         path.add(dpu, pu_demand_us)
         # donor region bandwidth: miss pages + the amortized ack DMA
@@ -358,11 +376,18 @@ def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
         / max(1, spec.num_clients)
     outstanding = wqe_rate * replay * mean_all
     if outstanding > cost.wqe_cache_entries:
+        if extra_wire_us == 0.0:
+            # the overflow fraction of WQEs refetches from host memory
+            # before hitting the wire (Fig. 1) — charge it as extra
+            # egress serialization and re-solve once at the slower rate
+            thrash = 1.0 - cost.wqe_cache_entries / outstanding
+            return _evaluate_at(spec, wl, link_config,
+                                extra_wire_us=thrash * cost.cache_miss_us)
         notes.append(
             f"estimated {outstanding:.0f} outstanding WQEs per client "
             f"exceed the {cost.wqe_cache_entries}-entry WQE cache — the "
-            f"simulated engine would thrash (Fig. 1); model latencies "
-            f"exclude the refetch penalty")
+            f"simulated engine would thrash (Fig. 1); latencies include "
+            f"a {extra_wire_us:.2f}us per-WQE refetch penalty")
     if spec.window_bytes is not None and \
             outstanding * op_bytes > spec.window_bytes:
         notes.append(
@@ -376,4 +401,5 @@ def _evaluate_at(spec, wl: ModelWorkload, link_config) -> ModelReport:
         capacity_ops_per_s=capacity, bottleneck=bottleneck,
         cache_hit_rate=cache_hit_rate,
         mr_hit_rate=mr_share if mr_pages else 1.0,
+        mr_prefetch_coverage=coverage,
         workload=wl)

@@ -178,7 +178,8 @@ class ModelSession:
             "serve_workers": ingress.servers if ingress else 0,
             "per_class": per_class,
             "cache": {"hit_rate": rep.cache_hit_rate},
-            "mr": {"hit_rate": rep.mr_hit_rate},
+            "mr": {"hit_rate": rep.mr_hit_rate,
+                   "prefetch_coverage": rep.mr_prefetch_coverage},
         }
         for node in self.donors:
             nic[str(node)] = {"service": service}
@@ -200,6 +201,7 @@ class ModelSession:
                 "bottleneck": rep.bottleneck,
                 "cache_hit_rate": rep.cache_hit_rate,
                 "mr_hit_rate": rep.mr_hit_rate,
+                "mr_prefetch_coverage": rep.mr_prefetch_coverage,
                 "eval_ms": rep.eval_ms,
                 "workload": wl.to_dict(),
                 "centers": {name: est.snapshot()

@@ -82,6 +82,12 @@ class ModelWorkload:
             one donor per op.
         merge_factor: average client-side requests folded into one WQE
             by the merge queue (1.0 = unmergeable random traffic).
+        stride_fraction: fraction of the traffic that follows a
+            sequential/strided extent stream a stride predictor can
+            cover (1.0 = pure scan, 0.0 = unpredictable random). Only
+            consulted when the spec enables MR prefetch — it becomes the
+            useful-prefetch fraction that turns critical-path faults
+            into background registrations.
         arrival_cv2 / service_cv2: squared coefficients of variation
             for the Allen–Cunneen wait (Poisson-ish arrivals over the
             simulator's deterministic service costs by default).
@@ -100,6 +106,7 @@ class ModelWorkload:
     working_set_pages: Optional[int] = None
     replicate_writes: bool = False
     merge_factor: float = 1.0
+    stride_fraction: float = 0.0
     arrival_cv2: float = 1.0
     service_cv2: float = 0.0
     target_utilization: float = 0.8
@@ -119,6 +126,8 @@ class ModelWorkload:
                              "the whole donor region)")
         if self.merge_factor < 1.0:
             raise ValueError("merge_factor must be >= 1")
+        if not 0.0 <= self.stride_fraction <= 1.0:
+            raise ValueError("stride_fraction must be in [0, 1]")
         if not 0.0 < self.target_utilization < 1.0:
             raise ValueError("target_utilization must be in (0, 1)")
         return self

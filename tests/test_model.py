@@ -187,6 +187,87 @@ def test_mr_faults_inflate_mean_and_tail():
     assert cls_cold.p99_us > cls_warm.p99_us
 
 
+def test_prefetch_coverage_scales_down_the_fault_rate():
+    """``stride_fraction`` of the traffic is predictable; with MR
+    prefetch enabled that fraction's faults move off the critical path:
+    the effective fault rate is ``fault_raw * (1 - coverage)``, the tail
+    shrinks, and the covered registrations still load the donor PU."""
+    wl = ModelWorkload(client_ops_per_s=1000.0, zipf_s=0.0,
+                       working_set_pages=16384, stride_fraction=0.75)
+    off = evaluate(model_spec(registered_pages=64), wl)
+    on = evaluate(model_spec(registered_pages=64,
+                             mr_prefetch={"depth": 8}), wl)
+    assert off.mr_prefetch_coverage == 0.0
+    assert on.mr_prefetch_coverage == 0.75
+    raw = off.classes["default"].mr_fault_rate
+    assert on.classes["default"].mr_fault_rate == pytest.approx(0.25 * raw)
+    assert on.classes["default"].mean_us < off.classes["default"].mean_us
+    # a near-fully-covered stream pushes faults below the 1% tail
+    # threshold: the registration stall leaves p99 entirely
+    hi = evaluate(model_spec(registered_pages=64, mr_prefetch={"depth": 8}),
+                  ModelWorkload(client_ops_per_s=1000.0, zipf_s=0.0,
+                                working_set_pages=16384,
+                                stride_fraction=0.995))
+    assert hi.classes["default"].mr_fault_rate < 0.01
+    assert hi.classes["default"].p99_us < off.classes["default"].p99_us
+    # background registrations are load, not latency: the covered run
+    # works the donor PU harder than a fully-warm (no-fault) run, but
+    # less than prefetch-off (covered faults also stop replaying the
+    # whole WQE through the donor)
+    warm = evaluate(model_spec(), wl)
+    assert (warm.centers["donor.ingress_pu"].utilization
+            < on.centers["donor.ingress_pu"].utilization
+            < off.centers["donor.ingress_pu"].utilization)
+
+
+def test_prefetch_coverage_requires_depth_and_a_cache():
+    wl = ModelWorkload(client_ops_per_s=1000.0, stride_fraction=1.0,
+                       working_set_pages=16384)
+    # no prefetch knob: stride_fraction alone changes nothing
+    rep = evaluate(model_spec(registered_pages=64), wl)
+    assert rep.mr_prefetch_coverage == 0.0
+    assert rep.classes["default"].mr_fault_rate > 0.9
+    # depth 0 is explicit off; no MR cache means nothing to cover
+    assert evaluate(model_spec(registered_pages=64,
+                               mr_prefetch={"depth": 0}),
+                    wl).mr_prefetch_coverage == 0.0
+    assert evaluate(model_spec(mr_prefetch={"depth": 8}),
+                    wl).mr_prefetch_coverage == 0.0
+    # the policy's own knob works without the spec override
+    rep = evaluate(model_spec(
+        mr={"name": "lru", "params": {"capacity_pages": 64,
+                                      "prefetch_depth": 4}}), wl)
+    assert rep.mr_prefetch_coverage == 1.0
+
+
+def test_stride_fraction_validates():
+    with pytest.raises(ValueError, match="stride_fraction"):
+        ModelWorkload(stride_fraction=1.5).validate()
+    with pytest.raises(ValueError, match="stride_fraction"):
+        ModelWorkload(stride_fraction=-0.1).validate()
+
+
+def test_wqe_cache_thrash_penalty_is_charged():
+    """Outstanding WQEs beyond the on-NIC cache refetch from host memory
+    (Fig. 1) — the model charges the overflow fraction as extra egress
+    serialization instead of the old note-only warning."""
+    wl = ModelWorkload(client_ops_per_s=50_000.0)
+    small = model_spec(nic_cost={**PU_HEAVY, "wqe_cache_entries": 1,
+                                 "cache_miss_us": 50.0})
+    big = model_spec(nic_cost={**PU_HEAVY, "wqe_cache_entries": 1 << 20,
+                               "cache_miss_us": 50.0})
+    thrashed = evaluate(small, wl)
+    clean = evaluate(big, wl)
+    notes = [n for n in thrashed.warnings["notes"] if "WQE cache" in n]
+    assert notes and "refetch penalty" in notes[0]
+    assert "exclude" not in notes[0]         # charged, not disclaimed
+    assert not any("WQE cache" in n for n in clean.warnings["notes"])
+    assert (thrashed.classes["default"].mean_us
+            > clean.classes["default"].mean_us)
+    assert (thrashed.centers["client.default.wire"].utilization
+            > clean.centers["client.default.wire"].utilization)
+
+
 # ---- saturation + bottleneck movement -------------------------------------
 def test_overload_warns_saturated_and_stays_finite():
     rep = evaluate(model_spec(), ModelWorkload(client_ops_per_s=10e6))

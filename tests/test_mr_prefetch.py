@@ -1,0 +1,468 @@
+"""Predictive MR prefetch + RNR replay jitter (ISSUE-10).
+
+Covers: the ``ExtentPrefetcher`` stride/confidence state machine (unit
+level — sequential, strided, descending, broken and random streams);
+the ``mr_prefetch`` spec knob round-tripping, validating, and rejecting
+non-MRConfig policies; the MR cache's background-prefetch protocol
+(drain → register → useful/wasted accounting, demand-race returns 0);
+the NIC scheduling rule (a background prefetch never preempts a
+dispatchable foreground run; idle workers do run prefetches and charge
+their PU pacers); prefetch-on vs prefetch-off end to end on a
+sequential scan (fewer faults, accuracy ≥ 0.5); the analytic model's
+prefetch-coverage prediction landing within the ±35% calibration band
+of the simulated fault rate; and the decorrelated-jitter satellite on
+the client RNR backoff (default stays deterministic doubling bit-exact,
+a seed bounds and reproduces the jittered delays).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro import box
+from repro.core import (
+    PAGE_SIZE,
+    ExtentPrefetcher,
+    MRCache,
+    MRConfig,
+    RemoteRegion,
+    TransferDescriptor,
+    Verb,
+    WCStatus,
+    WorkRequest,
+)
+from repro.core.completion import CompletionQueue
+from repro.fabric import Fabric
+from repro.model import ModelWorkload, evaluate
+
+
+def _mr_stats(session, donor):
+    return session.stats()["nic"][str(donor)]["service"]["mr"]
+
+
+def _desc(verb, dest, addr, num_pages=1, payload=None):
+    req = WorkRequest(verb=verb, dest_node=dest, remote_addr=addr,
+                      num_pages=num_pages, payload=payload)
+    return TransferDescriptor(verb=verb, dest_node=dest, remote_addr=addr,
+                              num_pages=num_pages, requests=[req])
+
+
+def _fault_then_replay(mr, addr, num_pages=1, client=None):
+    d = _desc(Verb.READ, mr.region.node_id, addr, num_pages)
+    fault, registered = mr.serve(d, client=client)
+    assert fault
+    assert mr.serve(d, client=client) == (False, 0)   # replay hits
+    return registered
+
+
+def _preload(donor_nic, descs, cq, src=0):
+    from repro.core.nic import _DonorJob
+    jobs = [_DonorJob(desc=d, cq=cq, src_node=src, status=WCStatus.SUCCESS,
+                      post_v=0.0, post_r=time.perf_counter(),
+                      fwd_complete_v=0.0, fwd_delay_real=0.0)
+            for d in descs]
+    for j in jobs:
+        donor_nic.serve_transfer(j)
+    return jobs
+
+
+def _drain(cq, n, timeout=5.0):
+    wcs = []
+    deadline = time.perf_counter() + timeout
+    while len(wcs) < n and time.perf_counter() < deadline:
+        wcs.extend(cq.poll(16))
+        time.sleep(0.001)
+    assert len(wcs) == n, f"only {len(wcs)}/{n} completions arrived"
+    return wcs
+
+
+# ---------------------------------------------------------------------------
+# ExtentPrefetcher (unit)
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_needs_confidence_before_predicting():
+    pf = ExtentPrefetcher(depth=4, degree=2, confidence=2)
+    assert pf.observe(0, 10, 1) == []        # first touch: no stream yet
+    assert pf.observe(0, 11, 1) == []        # stride 1, conf 1 < 2
+    out = pf.observe(0, 12, 1)               # conf 2: established
+    assert out == [(13, 1), (14, 1)]
+
+
+def test_prefetcher_depth_and_degree_bound_the_lookahead():
+    pf = ExtentPrefetcher(depth=3, degree=8, confidence=1)
+    pf.observe(0, 0, 1)
+    out = pf.observe(0, 1, 1)
+    # degree allows 8, depth allows only 3 strides past the demand page
+    assert out == [(2, 1), (3, 1), (4, 1)]
+
+
+def test_prefetcher_never_repredicts_covered_ground():
+    pf = ExtentPrefetcher(depth=8, degree=2, confidence=1)
+    pf.observe(0, 0, 1)
+    assert pf.observe(0, 1, 1) == [(2, 1), (3, 1)]
+    # the next observation resumes from the high-water mark, not page+1
+    assert pf.observe(0, 2, 1) == [(4, 1), (5, 1)]
+    assert pf.observe(0, 3, 1) == [(6, 1), (7, 1)]
+
+
+def test_prefetcher_strided_and_descending_streams():
+    pf = ExtentPrefetcher(depth=4, degree=2, confidence=2)
+    for p in (0, 8, 16):
+        out = pf.observe(1, p, 2)
+    assert out == [(24, 2), (32, 2)]         # stride 8, npages preserved
+    for p in (100, 96, 92):
+        out = pf.observe(2, p, 1)
+    assert out == [(88, 1), (84, 1)]         # descending scan
+
+
+def test_prefetcher_broken_stride_resets_confidence():
+    pf = ExtentPrefetcher(depth=4, degree=2, confidence=2)
+    for p in (0, 1, 2):
+        pf.observe(0, p, 1)
+    assert pf.observe(0, 50, 1) == []        # break: conf resets
+    assert pf.observe(0, 51, 1) == []        # conf 1 < 2
+    assert pf.observe(0, 52, 1) != []        # re-established
+
+
+def test_prefetcher_random_traffic_emits_almost_nothing():
+    rng = np.random.default_rng(3)
+    pf = ExtentPrefetcher(depth=4, degree=4, confidence=2)
+    emitted = sum(len(pf.observe(0, int(p), 1))
+                  for p in rng.integers(0, 10_000, 512))
+    assert emitted <= 8      # only accidental stride repeats slip through
+
+
+def test_prefetcher_streams_are_per_client():
+    pf = ExtentPrefetcher(depth=4, degree=1, confidence=2)
+    # interleaved clients would break a shared stream; per-client works
+    for p in (0, 1):
+        pf.observe(0, p, 1)
+        pf.observe(1, 1000 - p, 1)
+    assert pf.observe(0, 2, 1) == [(3, 1)]
+    assert pf.observe(1, 998, 1) == [(997, 1)]
+
+
+# ---------------------------------------------------------------------------
+# spec / policy plumbing
+# ---------------------------------------------------------------------------
+
+def test_mr_prefetch_roundtrips_through_spec():
+    spec = box.ClusterSpec(registered_pages=64,
+                           mr_prefetch={"depth": 8, "degree": 4})
+    again = box.ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.mr_prefetch == {"depth": 8, "degree": 4}
+    assert box.ClusterSpec().mr_prefetch is None
+
+
+def test_mr_prefetch_validation():
+    box.ClusterSpec(mr_prefetch={"depth": 0}).validate()
+    with pytest.raises(ValueError, match="unknown mr_prefetch"):
+        box.ClusterSpec(mr_prefetch={"dpeth": 4}).validate()
+    with pytest.raises(ValueError, match="depth"):
+        box.ClusterSpec(mr_prefetch={"depth": -1}).validate()
+    with pytest.raises(ValueError, match="degree"):
+        box.ClusterSpec(mr_prefetch={"degree": 0}).validate()
+    with pytest.raises(ValueError, match="confidence"):
+        box.ClusterSpec(mr_prefetch={"confidence": 0}).validate()
+
+
+def test_mr_prefetch_knobs_reach_the_cache():
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, registered_pages=16,
+                           mr_prefetch={"depth": 8, "degree": 3,
+                                        "confidence": 1})
+    with box.open(spec) as s:
+        pf = s.directory.lookup(s.donors[0]).mr.prefetcher
+        assert isinstance(pf, ExtentPrefetcher)
+        assert (pf.depth, pf.degree, pf.confidence) == (8, 3, 1)
+    # depth 0 (the default) leaves the cache predictor-free
+    with box.open(box.ClusterSpec(num_donors=1, donor_pages=256,
+                                  replication=1, nic_scale=2e-8,
+                                  registered_pages=16)) as s:
+        assert s.directory.lookup(s.donors[0]).mr.prefetcher is None
+
+
+def test_mr_prefetch_rejects_non_mrconfig_policy():
+    from repro.box.policies import register_policy
+
+    class NotAnMRConfig2:
+        def build(self, region):
+            return None
+
+    register_policy("mr", "custom-mr-for-prefetch-test")(NotAnMRConfig2)
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, mr="custom-mr-for-prefetch-test",
+                           mr_prefetch={"depth": 4})
+    with pytest.raises(ValueError, match="mr_prefetch.*only applies"):
+        box.open(spec)
+
+
+def test_mr_config_builds_prefetcher_only_when_depth_positive():
+    region = RemoteRegion(0, 64)
+    assert MRConfig(capacity_pages=8).build(region).prefetcher is None
+    mr = MRConfig(capacity_pages=8, prefetch_depth=4).build(region)
+    assert isinstance(mr.prefetcher, ExtentPrefetcher)
+
+
+# ---------------------------------------------------------------------------
+# MRCache background-prefetch protocol (unit)
+# ---------------------------------------------------------------------------
+
+def _pf_cache(capacity=16, depth=8, degree=2, confidence=2, pages=64):
+    pf = ExtentPrefetcher(depth=depth, degree=degree, confidence=confidence)
+    return MRCache(RemoteRegion(1, pages), capacity, prefetcher=pf)
+
+
+def test_serve_queues_predictions_and_prefetch_registers_them():
+    mr = _pf_cache(confidence=2)
+    for p in (0, 1, 2):
+        _fault_then_replay(mr, p, client=0)
+    cands = mr.drain_predictions()
+    assert cands and all(c[0] > 2 for c in cands)
+    assert mr.drain_predictions() == []          # drained once
+    got = sum(mr.prefetch_register(p, n) for p, n in cands)
+    assert got == len(cands)
+    snap = mr.snapshot()
+    assert snap["prefetch"]["issued"] == got
+    assert snap["prefetch"]["useful"] == 0       # not demanded yet
+    # the demand access hits — no fault — and credits usefulness
+    first = cands[0][0]
+    assert mr.serve(_desc(Verb.READ, 1, first), client=0) == (False, 0)
+    pf = mr.snapshot()["prefetch"]
+    assert pf["useful"] == 1
+    assert pf["accuracy"] == pytest.approx(1 / got)
+
+
+def test_replays_do_not_feed_the_stride_stream():
+    """A fault's replay is the same logical access arriving late — if it
+    were observed the out-of-order page would break the stream."""
+    mr = _pf_cache(confidence=2, degree=1)
+    d0, d1, d2 = (_desc(Verb.READ, 1, p) for p in (0, 1, 2))
+    # fault all three first, replay later (out of order)
+    for d in (d0, d1, d2):
+        assert mr.serve(d, client=0)[0]
+    for d in (d2, d0, d1):                       # replay order scrambled
+        assert mr.serve(d, client=0) == (False, 0)
+    # the stream saw 0,1,2 (fault order), not the scrambled replays
+    cands = mr.drain_predictions()
+    assert cands == [(3, 1)]
+
+
+def test_prefetch_register_loses_demand_race_cleanly():
+    mr = _pf_cache()
+    _fault_then_replay(mr, 5)                    # demand got there first
+    assert mr.prefetch_register(5, 1) == 0       # re-check: nothing to do
+    assert mr.snapshot()["registrations"] == 1
+    assert mr.snapshot()["prefetch"]["issued"] == 0
+    # out-of-region candidates clamp / drop instead of registering air
+    assert mr.prefetch_register(63, 4) == 1      # clamped to the region
+    assert mr.prefetch_register(64, 2) == 0
+    assert mr.prefetch_register(-2, 1) == 0
+
+
+def test_evicted_untouched_prefetch_counts_wasted():
+    mr = _pf_cache(capacity=4)
+    assert mr.prefetch_register(10, 2) == 2
+    for p in range(4):                           # churn the tiny cache
+        _fault_then_replay(mr, p)
+    pf = mr.snapshot()["prefetch"]
+    assert pf["issued"] == 2
+    assert pf["wasted"] == 2                     # evicted before demand
+    assert pf["accuracy"] == 0.0
+
+
+def test_disabled_snapshot_carries_zeroed_prefetch_shape():
+    snap = MRCache.disabled_snapshot()
+    assert snap["prefetch"] == {"issued": 0, "useful": 0, "wasted": 0,
+                                "accuracy": 0.0, "queued": 0,
+                                "bg_pu_us": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# NIC scheduling rule (white box)
+# ---------------------------------------------------------------------------
+
+def test_foreground_run_beats_a_queued_prefetch():
+    """Workers start on first post, so a hint queued beforehand is
+    pending when the first foreground job arrives — foreground-first
+    means the job still FAULTS on its page (the prefetch covering it
+    had no chance to run first)."""
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        region = fab.directory.lookup(1)
+        region.mr = mr = MRCache(region, capacity_pages=16)
+        donor._prefetch_queue.append((5, 1))     # covers the job's page
+        cq = CompletionQueue(cq_id=881)
+        _preload(donor, [_desc(Verb.READ, 1, 5)], cq)
+        wcs = _drain(cq, 1)
+        # prefetch did NOT preempt: the demand access paid its fault
+        assert wcs[0].status is WCStatus.RNR_RETRY_ERR
+        # afterwards the idle worker drains the hint, loses the re-check
+        # race (the fault registered page 5), and registers nothing new
+        deadline = time.perf_counter() + 5.0
+        while donor._prefetch_queue and time.perf_counter() < deadline:
+            time.sleep(0.001)
+        assert not donor._prefetch_queue
+        assert mr.snapshot()["registrations"] == 1
+        assert mr.snapshot()["prefetch"]["issued"] == 0
+
+
+def test_idle_workers_run_prefetch_and_charge_background_pu():
+    with Fabric(scale=2e-8) as fab:
+        donor = fab.add_node(1, donor_pages=64)
+        fab.add_node(0)
+        region = fab.directory.lookup(1)
+        region.mr = mr = MRCache(region, capacity_pages=16)
+        cq = CompletionQueue(cq_id=882)
+        _preload(donor, [_desc(Verb.READ, 1, 0)], cq)   # starts workers
+        _drain(cq, 1)
+        donor._queue_prefetch([(10, 2), (20, 1)])
+        deadline = time.perf_counter() + 5.0
+        while (mr.snapshot()["prefetch"]["issued"] < 3
+               and time.perf_counter() < deadline):
+            time.sleep(0.001)
+        svc = donor.service_snapshot()["mr"]
+        assert svc["prefetch"]["issued"] == 3
+        assert svc["prefetch"]["queued"] == 0
+        assert svc["prefetch"]["bg_pu_us"] > 0.0
+        # a prefetched page serves as a plain hit, zero registration
+        assert mr.serve(_desc(Verb.READ, 1, 10, 2), client=0) == (False, 0)
+        assert donor.stats.registrations.value == 3  # fault + 2 bg extents
+
+
+# ---------------------------------------------------------------------------
+# end to end: sequential scan, prefetch on vs off
+# ---------------------------------------------------------------------------
+
+def _scan_faults(prefetch, npages=48):
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, registered_pages=32,
+                           serve_workers=2, rnr_backoff_us=10.0,
+                           mr_prefetch=prefetch)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        eng = s.engine(0)
+        out = np.empty(PAGE_SIZE, np.uint8)
+        for p in range(npages):
+            eng.read(donor, p, 1, out=out).wait(30)
+            time.sleep(0.002)        # leave the idle window prefetch uses
+        return _mr_stats(s, donor)
+
+
+def test_sequential_scan_prefetch_turns_faults_into_hits():
+    off = _scan_faults(None)
+    on = _scan_faults({"depth": 8, "degree": 4, "confidence": 2})
+    assert off["faults"] == 48                   # every first touch faults
+    assert off["prefetch"]["issued"] == 0
+    assert on["faults"] <= off["faults"] // 2    # the stream got covered
+    assert on["prefetch"]["issued"] > 0
+    assert on["prefetch"]["useful"] > 0
+    assert on["prefetch"]["accuracy"] >= 0.5
+    assert on["prefetch"]["bg_pu_us"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# calibration band: simulated vs modeled fault rate with prefetch
+# ---------------------------------------------------------------------------
+
+def _strided_sim_fault_rate(prefetch, ops=128, stride=2):
+    spec = box.ClusterSpec(num_donors=1, donor_pages=512, replication=1,
+                           nic_scale=2e-8, registered_pages=16,
+                           serve_workers=2, rnr_backoff_us=10.0,
+                           mr_prefetch=prefetch)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        eng = s.engine(0)
+        out = np.empty(PAGE_SIZE, np.uint8)
+        for k in range(ops):
+            eng.read(donor, k * stride, 1, out=out).wait(30)
+            time.sleep(0.002)
+        return _mr_stats(s, donor)["faults"] / ops
+
+
+def test_model_prefetch_fault_rate_within_calibration_band():
+    """A stride-2 scan over 128 distinct pages with 16 registered: the
+    simulator faults on ~every touch with prefetch off and almost never
+    with it on; the analytic fault-rate prediction (zipf share, times
+    ``1 - stride_fraction`` coverage when prefetch is enabled) must land
+    within the same ±35% band the backend promises elsewhere."""
+    ops = 128
+    base = dict(num_donors=1, donor_pages=512, replication=1,
+                registered_pages=16, serve_workers=2)
+    wl = ModelWorkload(client_ops_per_s=1000.0, read_fraction=1.0,
+                       working_set_pages=ops, stride_fraction=1.0)
+    sim_off = _strided_sim_fault_rate(None, ops=ops)
+    model_off = evaluate(box.ClusterSpec(**base),
+                         wl).classes["default"].mr_fault_rate
+    assert sim_off > 0.9
+    assert abs(model_off - sim_off) <= 0.35 * sim_off
+    sim_on = _strided_sim_fault_rate(
+        {"depth": 8, "degree": 4, "confidence": 2}, ops=ops)
+    rep = evaluate(box.ClusterSpec(**base, mr_prefetch={"depth": 8}), wl)
+    model_on = rep.classes["default"].mr_fault_rate
+    assert rep.mr_prefetch_coverage == 1.0
+    assert model_on == 0.0
+    assert sim_on < sim_off / 2                  # prefetch worked in sim
+    assert abs(model_on - sim_on) <= 0.35
+
+
+# ---------------------------------------------------------------------------
+# decorrelated RNR jitter (satellite)
+# ---------------------------------------------------------------------------
+
+def _jitter_session(**kw):
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, **kw)
+    return box.open(spec)
+
+
+def test_rnr_jitter_seed_roundtrips_through_spec():
+    spec = box.ClusterSpec(rnr_jitter_seed=42)
+    assert box.ClusterSpec.from_json(spec.to_json()).rnr_jitter_seed == 42
+    assert box.ClusterSpec().rnr_jitter_seed is None
+
+
+def test_default_backoff_stays_deterministic_doubling():
+    with _jitter_session(rnr_backoff_us=200.0) as s:
+        eng = s.engine(0)
+        assert eng._rnr_rng is None
+        assert [eng._rnr_delay_us(7, a) for a in (1, 2, 3)] \
+            == [200.0, 400.0, 800.0]
+        # stateless: a second request sees the same schedule
+        assert eng._rnr_delay_us(8, 1) == 200.0
+        assert eng._retry_delay_us == {}
+
+
+def test_seeded_jitter_is_bounded_and_reproducible():
+    base, limit = 100.0, 4
+    cap = base * 2 ** (limit - 1)
+
+    def delays(seed):
+        with _jitter_session(rnr_backoff_us=base, rnr_retry_limit=limit,
+                             rnr_jitter_seed=seed) as s:
+            eng = s.engine(0)
+            return [eng._rnr_delay_us(5, a) for a in range(1, 7)]
+
+    a, b, c = delays(7), delays(7), delays(11)
+    assert a == b                                # same seed, same schedule
+    assert c != a                                # different seed differs
+    assert all(base <= d <= cap for d in a)
+    assert len(set(a)) > 1                       # actually jittered
+
+
+def test_jittered_replay_still_serves_and_cleans_up():
+    with _jitter_session(registered_pages=8, rnr_backoff_us=10.0,
+                         rnr_jitter_seed=3) as s:
+        donor = s.donors[0]
+        eng = s.engine(0)
+        data = np.random.default_rng(0).integers(
+            0, 255, PAGE_SIZE).astype(np.uint8)
+        eng.write(donor, 3, data).wait(30)       # faults, replays jittered
+        out = np.empty(PAGE_SIZE, np.uint8)
+        eng.read(donor, 3, 1, out=out).wait(30)
+        assert (out == data).all()
+        assert s.stats()["client"]["0"]["box"]["rnr_retries"] >= 1
+        assert eng._retry_delay_us == {}         # completion swept state

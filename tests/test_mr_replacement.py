@@ -1,0 +1,286 @@
+"""MR-cache replacement policies: lru / slru / freq-extent (ISSUE-10).
+
+The PR 8 invariants hold for EVERY policy (parametrized): pinned
+(fault-in-flight) pages survive eviction pressure, a warm extent
+registers once per residency, eviction deregisters and bounds
+residency, an all-pinned cache overflows transiently instead of
+livelocking, and a full fault → register → RNR-replay round trip
+through ``box.open`` stays byte-exact. Plus the policy-specific white
+boxes: SLRU scan resistance (a single-touch scan churns probation
+without flushing the protected hot set; replay touches never promote),
+promotion-overflow demotion, and freq-extent whole-extent victims (a
+cold extent's pages deregister together; the hot multi-page extent is
+never left partially registered).
+"""
+
+import numpy as np
+import pytest
+
+from repro import box
+from repro.core import (
+    PAGE_SIZE,
+    FreqExtentConfig,
+    FreqExtentMRCache,
+    MRCache,
+    MRConfig,
+    RemoteRegion,
+    SLRUConfig,
+    SLRUMRCache,
+    TransferDescriptor,
+    Verb,
+    WorkRequest,
+)
+
+POLICIES = {
+    "lru": MRCache,
+    "slru": SLRUMRCache,
+    "freq-extent": FreqExtentMRCache,
+}
+CONFIGS = {"lru": MRConfig, "slru": SLRUConfig, "freq-extent": FreqExtentConfig}
+
+
+def _desc(verb, dest, addr, num_pages=1):
+    req = WorkRequest(verb=verb, dest_node=dest, remote_addr=addr,
+                      num_pages=num_pages)
+    return TransferDescriptor(verb=verb, dest_node=dest, remote_addr=addr,
+                              num_pages=num_pages, requests=[req])
+
+
+def _fault_then_replay(mr, addr, num_pages=1):
+    d = _desc(Verb.READ, mr.region.node_id, addr, num_pages)
+    fault, registered = mr.serve(d)
+    assert fault
+    assert mr.serve(d) == (False, 0)        # replay: guaranteed hit
+    return registered
+
+
+def _hit(mr, addr, num_pages=1):
+    assert mr.serve(_desc(Verb.READ, mr.region.node_id, addr,
+                          num_pages)) == (False, 0)
+
+
+# ---------------------------------------------------------------------------
+# the PR 8 invariants, per policy
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(params=sorted(POLICIES))
+def policy(request):
+    return request.param
+
+
+def _make(policy, capacity=4, pages=64):
+    return POLICIES[policy](RemoteRegion(1, pages), capacity)
+
+
+def test_policy_registry_builds_the_right_cache(policy):
+    from repro.box.policies import create_policy
+    from repro.box.spec import PolicySpec
+    cfg = create_policy("mr", PolicySpec(policy,
+                                         {"capacity_pages": 8}))
+    assert isinstance(cfg, CONFIGS[policy])
+    mr = cfg.build(RemoteRegion(1, 64))
+    assert type(mr) is POLICIES[policy]
+    assert mr.capacity == 8
+    assert CONFIGS[policy]().build(RemoteRegion(1, 64)) is None  # 0 = off
+
+
+def test_warm_extent_registers_once_per_residency(policy):
+    mr = _make(policy, capacity=8)
+    assert _fault_then_replay(mr, 3, 2) == 2
+    for _ in range(10):
+        _hit(mr, 3, 2)
+    snap = mr.snapshot()
+    assert snap["registrations"] == 2
+    assert snap["faults"] == 1 and snap["replays"] == 1
+
+
+def test_eviction_deregisters_and_bounds_residency(policy):
+    mr = _make(policy, capacity=4)
+    for p in range(6):
+        _fault_then_replay(mr, p)
+    snap = mr.snapshot()
+    assert snap["resident_pages"] <= 4
+    assert snap["deregistrations"] >= 2
+    assert snap["registrations"] == 6
+
+
+def test_pinned_pages_survive_eviction_pressure(policy):
+    mr = _make(policy, capacity=2)
+    d0 = _desc(Verb.READ, 1, 0)
+    assert mr.serve(d0) == (True, 1)        # pinned until replayed
+    for p in range(1, 6):
+        _fault_then_replay(mr, p)           # churn the other frame
+    assert mr.snapshot()["pinned_pages"] == 1
+    assert mr.serve(d0) == (False, 0)       # replay hits, unpins
+    snap = mr.snapshot()
+    assert snap["pinned_pages"] == 0
+    assert snap["replays"] == 6
+
+
+def test_all_pinned_overflows_transiently(policy):
+    mr = _make(policy, capacity=1)
+    da, db = _desc(Verb.READ, 1, 0), _desc(Verb.READ, 1, 1)
+    assert mr.serve(da) == (True, 1)
+    assert mr.serve(db) == (True, 1)        # victim pinned: overflow
+    assert mr.snapshot()["resident_pages"] == 2
+    assert mr.serve(da) == (False, 0)
+    assert mr.serve(db) == (False, 0)
+    _fault_then_replay(mr, 2)               # next fault sweeps the excess
+    snap = mr.snapshot()
+    assert snap["resident_pages"] <= 2      # bounded again (cap + batch)
+    assert snap["deregistrations"] >= 1
+
+
+def test_box_open_churn_stays_byte_exact(policy):
+    """Full engine round trip per policy: a universe 4x the capacity
+    keeps evict/re-register churn running; every page reads back
+    exactly what was last written."""
+    spec = box.ClusterSpec(num_donors=1, donor_pages=256, replication=1,
+                           nic_scale=2e-8, registered_pages=8,
+                           rnr_backoff_us=10.0, mr=policy)
+    with box.open(spec) as s:
+        donor = s.donors[0]
+        eng = s.engine(0)
+        universe = 32
+        rng = np.random.default_rng(5)
+        version = {}
+        for p in rng.integers(0, universe, 96):
+            p = int(p)
+            v = version.get(p, 0) + 1
+            version[p] = v
+            data = np.full(PAGE_SIZE, (37 * p + 101 * v) % 256, np.uint8)
+            eng.write(donor, p, data).wait(30)
+        buf = np.empty(PAGE_SIZE, np.uint8)
+        for p, v in version.items():
+            eng.read(donor, p, 1, out=buf).wait(30)
+            assert (buf == (37 * p + 101 * v) % 256).all(), \
+                f"policy {policy}: page {p} corrupt"
+        st = s.stats()["nic"][str(donor)]["service"]["mr"]
+        assert st["deregistrations"] > 0            # churn happened
+        assert st["pinned_pages"] == 0
+        assert st["resident_pages"] <= st["capacity_pages"]
+
+
+# ---------------------------------------------------------------------------
+# SLRU white box: scan resistance
+# ---------------------------------------------------------------------------
+
+def test_slru_replay_touch_does_not_promote():
+    """Fault + replay is ONE logical access: the page stays on
+    probation; only a genuine re-use promotes it."""
+    mr = SLRUMRCache(RemoteRegion(1, 64), 8, protected_fraction=0.5)
+    _fault_then_replay(mr, 0)
+    snap = mr.snapshot()
+    assert snap["probation_pages"] == 1 and snap["protected_pages"] == 0
+    _hit(mr, 0)                             # the re-use promotes
+    snap = mr.snapshot()
+    assert snap["probation_pages"] == 0 and snap["protected_pages"] == 1
+
+
+def test_slru_scan_does_not_flush_the_hot_set():
+    """Plain LRU loses the hot set to any long single-touch scan; SLRU
+    keeps re-used pages in the protected segment and churns the scan
+    through probation."""
+    mr = SLRUMRCache(RemoteRegion(1, 256), 8, protected_fraction=0.5)
+    hot = range(4)
+    for p in hot:
+        _fault_then_replay(mr, p)
+        _hit(mr, p)                         # promoted to protected
+    for p in range(100, 130):               # 30-page single-touch scan
+        _fault_then_replay(mr, p)
+    for p in hot:
+        _hit(mr, p)                         # still resident: no faults
+    snap = mr.snapshot()
+    assert snap["faults"] == 4 + 30         # the hot re-reads added none
+    assert snap["protected_pages"] == 4
+    # the control: plain LRU at the same capacity DOES flush the hot set
+    lru = MRCache(RemoteRegion(1, 256), 8)
+    for p in hot:
+        _fault_then_replay(lru, p)
+        _hit(lru, p)
+    for p in range(100, 130):
+        _fault_then_replay(lru, p)
+    assert all(lru.serve(_desc(Verb.READ, 1, p))[0] for p in hot)
+
+
+def test_slru_promotion_overflow_demotes_to_probation():
+    mr = SLRUMRCache(RemoteRegion(1, 64), 8, protected_fraction=0.25)
+    assert mr.protected_cap == 2
+    for p in range(3):
+        _fault_then_replay(mr, p)
+        _hit(mr, p)                         # promote: 3 > cap of 2
+    snap = mr.snapshot()
+    assert snap["protected_pages"] == 2     # oldest demoted back
+    assert snap["probation_pages"] == 1
+    assert snap["resident_pages"] == 3      # demotion never loses a page
+
+
+def test_slru_victims_come_from_probation_first():
+    mr = SLRUMRCache(RemoteRegion(1, 64), 4, protected_fraction=0.5)
+    _fault_then_replay(mr, 0)
+    _hit(mr, 0)                             # page 0 protected
+    for p in range(1, 4):
+        _fault_then_replay(mr, p)           # probation full
+    _fault_then_replay(mr, 10)              # evicts probation LRU (page 1)
+    assert not mr.serve(_desc(Verb.READ, 1, 0))[0]   # protected survived
+    assert mr.serve(_desc(Verb.READ, 1, 1))[0]       # probation victim
+
+
+# ---------------------------------------------------------------------------
+# freq-extent white box: whole-extent victims
+# ---------------------------------------------------------------------------
+
+def test_freq_extent_evicts_the_cold_extent_whole():
+    mr = FreqExtentMRCache(RemoteRegion(1, 64), 8)
+    assert _fault_then_replay(mr, 0, 4) == 4        # extent A: pages 0-3
+    for _ in range(3):
+        _hit(mr, 0, 4)                              # A is hot
+    assert _fault_then_replay(mr, 10, 2) == 2       # extent B: cold
+    assert _fault_then_replay(mr, 20, 4) == 4       # C forces eviction
+    snap = mr.snapshot()
+    assert snap["deregistrations"] == 2             # ALL of B, only B
+    assert snap["extents"] == 2                     # A and C
+    _hit(mr, 0, 4)                                  # A intact, no fault
+    assert mr.serve(_desc(Verb.READ, 1, 10, 2))[0]  # B gone: faults
+
+
+def test_freq_extent_never_orphans_part_of_an_extent():
+    """The failure mode this policy removes: page-granular LRU can evict
+    half a multi-page extent, turning the next whole-extent access into
+    a fault for the orphaned remainder. Victims here are whole extents,
+    so residency is always a union of complete extents."""
+    mr = FreqExtentMRCache(RemoteRegion(1, 64), 6)
+    _fault_then_replay(mr, 0, 3)                    # extent A
+    _fault_then_replay(mr, 10, 3)                   # extent B
+    _fault_then_replay(mr, 20, 3)                   # evicts exactly one
+    snap = mr.snapshot()
+    assert snap["resident_pages"] == 6
+    assert snap["deregistrations"] == 3             # one whole extent
+    # whichever of A/B survived is FULLY resident, the other fully gone
+    a = [p in mr._page_ext for p in range(0, 3)]
+    b = [p in mr._page_ext for p in range(10, 13)]
+    assert all(a) != all(b)
+    assert all(a) or not any(a)
+    assert all(b) or not any(b)
+
+
+def test_freq_extent_frequency_beats_recency():
+    """The hot-but-not-recent extent survives; LRU would evict it."""
+    mr = FreqExtentMRCache(RemoteRegion(1, 64), 4)
+    _fault_then_replay(mr, 0, 2)                    # extent A
+    for _ in range(5):
+        _hit(mr, 0, 2)                              # A: high frequency
+    _fault_then_replay(mr, 10, 2)                   # extent B, more recent
+    _fault_then_replay(mr, 20, 2)                   # eviction decision
+    assert not mr.serve(_desc(Verb.READ, 1, 0, 2))[0]    # A survived
+    assert mr.serve(_desc(Verb.READ, 1, 10, 2))[0]       # B was victim
+
+
+def test_freq_extent_pinned_extents_are_skipped_whole():
+    mr = FreqExtentMRCache(RemoteRegion(1, 64), 4)
+    d = _desc(Verb.READ, 1, 0, 2)
+    assert mr.serve(d) == (True, 2)                 # A pinned (no replay)
+    _fault_then_replay(mr, 10, 2)                   # extent B
+    _fault_then_replay(mr, 20, 2)                   # must not touch A
+    assert mr.serve(d) == (False, 0)                # A's replay still hits
+    assert mr.serve(_desc(Verb.READ, 1, 10, 2))[0]  # B was the victim
